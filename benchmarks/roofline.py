@@ -1,0 +1,111 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) cell on the single-pod 16x16 mesh (256 chips):
+
+    compute term    = HLO_dot_FLOPs_per_device / 197 TFLOP/s
+    memory term     = HLO_bytes_per_device     / 819 GB/s
+    collective term = collective_bytes_per_dev / 50 GB/s
+
+(the per-device numbers come from the trip-count-aware HLO walker over the
+post-SPMD partitioned module, so dividing by per-chip peaks is exactly the
+assignment's ``X / (chips * peak)`` with global X).
+
+Also reported: the dominant term, MODEL_FLOPS = 6*N_active*D (train) or
+2*N_active*D (serve), the useful-compute ratio MODEL_FLOPS / HLO_FLOPs,
+and a one-line lever for the dominant term.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+LEVERS = {
+    "compute": ("lower remat recompute (save-dots policy) or shrink the "
+                "useful-FLOP gap (attention/xent recompute)"),
+    "memory": ("fuse/eliminate intermediate round-trips: bigger scan "
+               "chunks, bf16 intermediates, fewer pad/transpose copies"),
+    "collective": ("reshard: move FSDP all-gathers off the hot loop, "
+                   "overlap collectives with compute, or compress"),
+}
+
+
+def load(dryrun_dir: str | Path, mesh: str = "single") -> list[dict]:
+    rows = []
+    for path in sorted(Path(dryrun_dir).glob(f"*_{mesh}.json")):
+        rec = json.loads(path.read_text())
+        row = {"arch": rec["arch"], "shape": rec["shape"],
+               "mesh": rec["mesh"]}
+        if rec.get("skipped"):
+            row["skipped"] = rec["skipped"]
+            rows.append(row)
+            continue
+        if not rec.get("ok") or "hlo_cost" not in rec:
+            row["error"] = rec.get("error", "?")
+            rows.append(row)
+            continue
+        hc = rec["hlo_cost"]
+        chips = 1
+        for v in rec.get("mesh_shape", {}).values():
+            chips *= v
+        compute = hc["dot_flops"] / PEAK_FLOPS
+        memory = hc["bytes_accessed"] / HBM_BW
+        coll = hc["collective_total_bytes"] / ICI_BW
+        terms = {"compute": compute, "memory": memory, "collective": coll}
+        dom = max(terms, key=terms.get)
+        hlo_total_flops = hc["dot_flops"] * chips
+        row.update({
+            "chips": chips,
+            "compute_s": compute, "memory_s": memory, "collective_s": coll,
+            "bottleneck": dom,
+            "step_s": max(terms.values()),
+            "roofline_frac": compute / max(terms.values()),
+            "model_flops": rec["model_flops"],
+            "useful_ratio": (rec["model_flops"] / hlo_total_flops
+                             if hlo_total_flops else 0.0),
+            "hbm_per_dev_gb": (rec.get("memory", {})
+                               .get("temp_size_in_bytes", 0) / 2**30),
+            "lever": LEVERS[dom],
+        })
+        rows.append(row)
+    return rows
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "bottleneck | roofline frac | 6ND/HLO | HBM GiB/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped | — | — | — |")
+            continue
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | | |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"{r['bottleneck']} | {r['roofline_frac']:.2f} | "
+            f"{r['useful_ratio']:.2f} | {r['hbm_per_dev_gb']:.2f} |")
+    return "\n".join(lines)
+
+
+def run(quick=True, dryrun_dir="experiments/dryrun") -> list[dict]:
+    p = Path(dryrun_dir)
+    if not p.exists() or not list(p.glob("*_single.json")):
+        return [{"name": "roofline", "note":
+                 "no dry-run artifacts found; run repro.launch.dryrun"}]
+    rows = load(p)
+    out = Path("experiments/roofline.json")
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(rows, indent=1))
+    return rows
+
+
+if __name__ == "__main__":
+    print(markdown_table(run()))

@@ -1,0 +1,60 @@
+"""Benchmark runner: one module per paper table/figure + the roofline and
+fleet-scheduling reports.  ``python -m benchmarks.run [--full]``."""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (slow on CPU)")
+    ap.add_argument("--only", default="",
+                    help="comma list of module names to run")
+    ap.add_argument("--out", default="experiments/bench")
+    args = ap.parse_args(argv)
+    quick = not args.full
+
+    from benchmarks import (energy_overhead, roofline, scaling, sched_bench,
+                            sharing_perf, traces_bench, validation)
+    modules = {
+        "validation": validation,        # Fig 7/8/9/10
+        "sharing_perf": sharing_perf,    # Fig 12 / Table 3
+        "scaling": scaling,              # Fig 13 / Fig 15
+        "traces": traces_bench,          # Fig 14
+        "energy_overhead": energy_overhead,  # Fig 16/17
+        "roofline": roofline,            # §Roofline
+        "sched": sched_bench,            # energy-aware fleet matrix
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        modules = {k: v for k, v in modules.items() if k in keep}
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    failures = 0
+    for name, mod in modules.items():
+        t0 = time.time()
+        try:
+            rows = mod.run(quick=quick)
+            status = "ok"
+        except Exception:
+            rows = [{"error": traceback.format_exc()[-2000:]}]
+            status = "FAIL"
+            failures += 1
+        wall = time.time() - t0
+        (outdir / f"{name}.json").write_text(json.dumps(rows, indent=1))
+        print(f"== {name} [{status}] ({wall:.1f}s) " + "=" * 40)
+        for row in rows if isinstance(rows, list) else [rows]:
+            print("  " + json.dumps(row)[:240])
+    print(f"\nbenchmarks complete, {failures} failures; "
+          f"results in {outdir}/")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,81 @@
+"""Fig. 13 + Fig. 15 — scaling-ratio analyses.
+
+Fig. 13: the paper's scaling-ratio function
+``s(k, rho, n, d) = sigma(k, rho, n, d) / (n * sigma(k, rho, 1, d))``
+over load characteristics (task-length variety rho, spread d) and
+parallelism n.  s < 1 means better-than-linear scaling (the paper's
+headline claim for DISSECT-CF: it never drops below linear).
+
+Fig. 15: infrastructure-size scaling — aggregated runtime for GWA-like
+traces while sweeping the simulated machine count, compared via Eq. 17.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core import engine
+from repro.core.trace import filter_fitting, gwa_like_trace, synthetic_trace
+
+
+def _wall(spec, trace) -> float:
+    res = engine.simulate(spec, trace)
+    jax.block_until_ready(res.t_end)
+    t0 = time.time()
+    jax.block_until_ready(engine.simulate(spec, trace).t_end)
+    return time.time() - t0
+
+
+def fig13_scaling_ratio(quick=True) -> list[dict]:
+    rows = []
+    parallels = (10, 100, 1000) if quick else (10, 100, 1000, 10000)
+    n_base = 500 if quick else 5000
+    for rho, d in ((( 10.0, 90.0), 10.0), ((200.0, 3600.0), 10.0),
+                   ((10.0, 90.0), 200.0), ((200.0, 3600.0), 200.0)):
+        spec = engine.CloudSpec(n_pm=1, n_vm=4096, pm_cores=1e9,
+                                perf_core=1.0, image_mb=1e-4,
+                                boot_work=1e-6, latency_s=1e-6,
+                                max_events=4_000_000)
+        t1 = synthetic_trace(n_base, 1, spread_s=d, length_range=rho,
+                             seed=1)
+        base = _wall(spec, t1) / n_base
+        for n in parallels:
+            tn = synthetic_trace(max(n, n_base), n, spread_s=d,
+                                 length_range=rho, seed=n)
+            per_task = _wall(spec, tn) / tn.n
+            rows.append({
+                "name": "fig13_scaling_ratio",
+                "length_range": list(rho), "spread_s": d, "parallel": n,
+                "s_ratio": round(per_task / base, 3),
+                "sublinear": bool(per_task / base <= 1.05),
+            })
+    return rows
+
+
+def fig15_infra_scaling(quick=True) -> list[dict]:
+    rows = []
+    machines = (1, 5, 20) if quick else (1, 5, 20, 100, 500)
+    counts = (200, 800) if quick else (1000, 10000, 100000)
+    fams = ("das2", "lcg") if quick else tuple(
+        __import__("repro.core.trace", fromlist=["GWA_FAMILIES"])
+        .GWA_FAMILIES)
+    for mc in machines:
+        for fam in fams:
+            walls = {}
+            for n in counts:
+                trace = filter_fitting(gwa_like_trace(fam, n, seed=7), 64.0)
+                spec = engine.CloudSpec(n_pm=mc, n_vm=2048, pm_cores=64.0,
+                                        max_events=4_000_000)
+                walls[n] = _wall(spec, trace)
+            n1, n2 = counts[0], counts[-1]
+            s = (n2 * walls[n1]) / (n1 * walls[n2])  # Eq. 17
+            rows.append({"name": "fig15_infra_scaling", "family": fam,
+                         "machines": mc, "tasks": list(counts),
+                         "wall_s": [round(walls[n], 4) for n in counts],
+                         "eq17_scaling": round(s, 3)})
+    return rows
+
+
+def run(quick=True) -> list[dict]:
+    return fig13_scaling_ratio(quick) + fig15_infra_scaling(quick)

@@ -1,0 +1,1 @@
+from .pydes import PyDESCloud  # noqa: F401

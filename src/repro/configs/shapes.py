@@ -1,0 +1,111 @@
+"""Assigned input shapes and their abstract input specs.
+
+Each LM architecture is paired with the four assigned shape cells:
+
+* ``train_4k``      seq 4096,   global batch 256  -> ``train_step``
+* ``prefill_32k``   seq 32768,  global batch 32   -> ``prefill``
+* ``decode_32k``    seq 32768,  global batch 128  -> ``decode_step`` (1 new
+  token against a KV cache of 32k)
+* ``long_500k``     seq 524288, global batch 1    -> ``decode_step``;
+  requires sub-quadratic sequence mixing, so it only runs for the SSM/hybrid
+  architectures (skips recorded per cell).
+
+:func:`input_specs` produces ``ShapeDtypeStruct`` stand-ins (no allocation)
+for every model input of a cell — the multi-pod dry-run lowers against them.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524_288, 1),
+}
+
+# encoder length used for enc-dec decode cells (the self-cache is `seq`;
+# cross-attention covers a fixed stubbed source utterance)
+ENCDEC_DECODE_SRC = 4_096
+# patch count for the VLM prefix (stubbed SigLIP: 448x448 / 14 -> 1024; we
+# use the paligemma-224 default of 256 patches)
+VLM_PATCHES = 256
+
+
+def skip_reason(cfg: lm.ModelConfig, shape: ShapeCell) -> str | None:
+    """Return why a cell is skipped (assignment rules), or None to run it."""
+    if shape.name == "long_500k" and cfg.family not in ("hybrid", "ssm"):
+        return ("full-attention architecture: 512k decode needs "
+                "sub-quadratic sequence mixing (assignment rule)")
+    return None
+
+
+def input_specs(cfg: lm.ModelConfig, shape: ShapeCell) -> dict:
+    """Abstract model inputs for one cell.
+
+    train  -> {'batch': {tokens, targets, loss_mask [, patches | frames]}}
+    prefill-> {'batch': {tokens [, patches | frames]}, 'cache': ...}
+    decode -> {'tokens': [B,1], 'cache': ...}
+    """
+    B, S = shape.batch, shape.seq
+    i32 = jnp.int32
+    f32 = jnp.float32
+    sds = jax.ShapeDtypeStruct
+
+    def text_batch(T):
+        return {
+            "tokens": sds((B, T), i32),
+            "targets": sds((B, T), i32),
+            "loss_mask": sds((B, T), f32),
+        }
+
+    if shape.kind == "train":
+        if cfg.family == "vlm":
+            P = VLM_PATCHES
+            batch = {
+                "tokens": sds((B, S - P), i32),
+                "patches": sds((B, P, cfg.d_model), f32),
+                "targets": sds((B, S), i32),
+                "loss_mask": sds((B, S), f32),
+            }
+        elif cfg.is_encdec:
+            batch = text_batch(S)
+            batch["frames"] = sds((B, S, cfg.d_model), f32)
+        else:
+            batch = text_batch(S)
+        return {"batch": batch}
+
+    if shape.kind == "prefill":
+        if cfg.family == "vlm":
+            P = VLM_PATCHES
+            batch = {"tokens": sds((B, S - P), i32),
+                     "patches": sds((B, P, cfg.d_model), f32)}
+            enc_len = 0
+        elif cfg.is_encdec:
+            batch = {"tokens": sds((B, S), i32),
+                     "frames": sds((B, S, cfg.d_model), f32)}
+            enc_len = S
+        else:
+            batch = {"tokens": sds((B, S), i32)}
+            enc_len = 0
+        cache = lm.cache_struct(cfg, B, S, enc_len=enc_len)
+        return {"batch": batch, "cache": cache}
+
+    # decode
+    enc_len = ENCDEC_DECODE_SRC if cfg.is_encdec else 0
+    cache = lm.cache_struct(cfg, B, S, enc_len=enc_len)
+    return {"tokens": sds((B, 1), i32), "cache": cache}

@@ -1,0 +1,141 @@
+"""Struct-of-arrays state for the unified resource sharing model (paper §3.2).
+
+DISSECT-CF represents in-flight work as *resource consumptions*
+``c = <p_u, p_r, p_l>`` flowing from a *provider* spreader to a *consumer*
+spreader.  A Java object graph does not vectorise, so the whole simulation
+state lives in fixed-capacity dense arrays with ``active`` masks; slot
+allocation is an ``argmin`` over the free mask.
+
+All functions are pure and jit/vmap friendly.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# Consumption "kind" tags used by the cloud engine (engine.py).  The bare
+# sharing loop ignores them.
+KIND_TASK = 0          # user task running in a VM (cpu provider -> vm cpu)
+KIND_IMAGE_XFER = 1    # VM image transfer (repo net-out -> pm net-in)
+KIND_BOOT = 2          # VM startup work (pm cpu -> vm cpu)
+KIND_HIDDEN = 3        # PM power-state "hidden consumer" work (paper §3.4.2)
+KIND_XFER = 4          # generic network transfer (network benchmarks)
+
+INF = jnp.float32(jnp.inf)
+
+
+class Consumptions(NamedTuple):
+    """SoA of resource consumptions, capacity ``C`` (static)."""
+
+    p_u: jax.Array        # f32[C] under-way buffer (paper Eq. 1)
+    p_r: jax.Array        # f32[C] remaining processing
+    p_l: jax.Array        # f32[C] per-time-unit processing limit
+    provider: jax.Array   # i32[C] spreader index (undefined when inactive)
+    consumer: jax.Array   # i32[C] spreader index
+    active: jax.Array     # bool[C] slot in use
+    t_release: jax.Array  # f32[C] latency gate: inert until t >= t_release (Eq. 10-11)
+    kind: jax.Array       # i32[C] engine tag (KIND_*)
+    ref: jax.Array        # i32[C] engine back-reference (task id / vm slot / pm slot)
+    total: jax.Array      # f32[C] p_r at registration (for progress & thresholds)
+
+    @property
+    def capacity(self) -> int:
+        return self.p_r.shape[0]
+
+
+def empty_consumptions(capacity: int) -> Consumptions:
+    z = jnp.zeros((capacity,), jnp.float32)
+    zi = jnp.zeros((capacity,), jnp.int32)
+    return Consumptions(
+        p_u=z, p_r=z, p_l=z + INF, provider=zi, consumer=zi,
+        active=jnp.zeros((capacity,), bool), t_release=z, kind=zi, ref=zi,
+        total=z,
+    )
+
+
+def alloc_slot(active: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Return (slot index, ok).  ``ok`` is False when the pool is exhausted."""
+    free = ~active
+    slot = jnp.argmax(free)
+    return slot.astype(jnp.int32), free[slot]
+
+
+def register(
+    cons: Consumptions,
+    *,
+    provider: jax.Array | int,
+    consumer: jax.Array | int,
+    amount: jax.Array | float,
+    limit: jax.Array | float = INF,
+    t_release: jax.Array | float = 0.0,
+    kind: jax.Array | int = KIND_TASK,
+    ref: jax.Array | int = 0,
+    enable: jax.Array | bool = True,
+) -> tuple[Consumptions, jax.Array, jax.Array]:
+    """Register a new resource consumption.  Returns (cons, slot, ok).
+
+    When ``enable`` is False or no slot is free, the state is unchanged and
+    ok=False.  This mirrors DISSECT-CF's registration step (Fig. 3, step 2)
+    without dynamic allocation.
+    """
+    slot, free_ok = alloc_slot(cons.active)
+    ok = jnp.logical_and(free_ok, enable)
+    amount = jnp.asarray(amount, jnp.float32)
+
+    def wr(arr, val):
+        return arr.at[slot].set(jnp.where(ok, val, arr[slot]))
+
+    new = Consumptions(
+        p_u=wr(cons.p_u, 0.0),
+        p_r=wr(cons.p_r, amount),
+        p_l=wr(cons.p_l, jnp.asarray(limit, jnp.float32)),
+        provider=wr(cons.provider, jnp.asarray(provider, jnp.int32)),
+        consumer=wr(cons.consumer, jnp.asarray(consumer, jnp.int32)),
+        active=wr(cons.active, True),
+        t_release=wr(cons.t_release, jnp.asarray(t_release, jnp.float32)),
+        kind=wr(cons.kind, jnp.asarray(kind, jnp.int32)),
+        ref=wr(cons.ref, jnp.asarray(ref, jnp.int32)),
+        total=wr(cons.total, amount),
+    )
+    return new, slot, ok
+
+
+def deregister(cons: Consumptions, mask: jax.Array) -> Consumptions:
+    """Deactivate all slots in ``mask`` (completion phase, Fig. 3 step 12-13)."""
+    return cons._replace(active=jnp.where(mask, False, cons.active))
+
+
+def live_mask(cons: Consumptions, t: jax.Array) -> jax.Array:
+    """Consumptions that currently compete for resources.
+
+    Latency gating (paper Eq. 10-11): while ``t < t_release`` the consumption
+    is registered to the non-performing spreader ``s_nil``; here that simply
+    means it is excluded from the fair-share computation.
+    """
+    return cons.active & (t >= cons.t_release) & (cons.p_r + cons.p_u > 0.0)
+
+
+class KahanSum(NamedTuple):
+    """f32 compensated accumulator: event-horizon loops add millions of small
+    increments; Kahan summation keeps the simulated clock and energy integrals
+    accurate without f64 (TPUs and default JAX are f32)."""
+
+    hi: jax.Array
+    lo: jax.Array
+
+    @staticmethod
+    def zero(shape=(), dtype=jnp.float32) -> "KahanSum":
+        z = jnp.zeros(shape, dtype)
+        return KahanSum(z, z)
+
+    def add(self, x: jax.Array) -> "KahanSum":
+        y = x - self.lo
+        hi = self.hi + y
+        lo = (hi - self.hi) - y
+        return KahanSum(hi, lo)
+
+    @property
+    def value(self) -> jax.Array:
+        return self.hi

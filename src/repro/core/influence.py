@@ -1,0 +1,66 @@
+"""Influence groups (paper §3.2.2) as vectorized connected components.
+
+An influence group is the connected component of the bipartite
+provider/consumer graph induced by the live resource consumptions (Eq. 3).
+DISSECT-CF maintains groups incrementally (Alg. 1) because recomputation is
+expensive on a pointer machine; in the dense formulation we recompute by
+min-label propagation — a handful of scatter-min rounds that vectorise and
+batch, and whose fixpoint satisfies the paper's self-consistency property
+(Eq. 4).  See DESIGN.md §2 for why Alg. 1 itself has no TPU analogue.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_BIG = jnp.int32(2**30)
+
+
+def influence_labels(
+    provider: jax.Array,
+    consumer: jax.Array,
+    live: jax.Array,
+    num_spreaders: int,
+    *,
+    max_rounds: int = 0,
+) -> jax.Array:
+    """Return i32[S] group labels (min spreader index in the component).
+
+    Spreaders with no live consumption form singleton groups labelled by
+    themselves.  ``max_rounds=0`` auto-bounds by the spreader count (the
+    propagation diameter can never exceed it); each round is O(C) scatter-min.
+    """
+    S = num_spreaders
+    if max_rounds <= 0:
+        max_rounds = S
+    label0 = jnp.arange(S, dtype=jnp.int32)
+    prov = jnp.where(live, provider, 0)
+    cons = jnp.where(live, consumer, 0)
+
+    def body(state):
+        i, label, _changed = state
+        edge = jnp.minimum(label[prov], label[cons])
+        edge = jnp.where(live, edge, _BIG)
+        new = label.at[prov].min(edge).at[cons].min(edge)
+        return i + 1, new, (new != label).any()
+
+    def cond(state):
+        i, _label, changed = state
+        return jnp.logical_and(changed, i < max_rounds)
+
+    _, label, _ = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), label0, jnp.bool_(True))
+    )
+    return label
+
+
+def group_sizes(labels: jax.Array) -> jax.Array:
+    """i32[S] — size of the group each spreader belongs to (``|G(s,t)|``,
+    used by the VM power-attribution Eq. 6)."""
+    S = labels.shape[0]
+    counts = jax.ops.segment_sum(jnp.ones_like(labels), labels, num_segments=S)
+    return counts[labels]
+
+
+def same_group(labels: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
+    return labels[a] == labels[b]

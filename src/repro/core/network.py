@@ -1,0 +1,91 @@
+"""Networking model (paper §3.4.1): NetworkNode = <in, out> spreader pair.
+
+A network node owns an incoming and an outgoing spreader whose processing
+power is its bandwidth; a transfer is a resource consumption from the
+source's *out* spreader to the target's *in* spreader, latency-gated by
+``t_release = t_register + latency`` (Eqs. 7-11, the ``s_nil`` construction).
+Intermediary entities (routers) act by capping the transfer's ``p_l``
+(paper: "alter the processing limit of all resource consumptions directed
+through them").
+
+These helpers build :class:`repro.core.sharing.SharingProblem` instances for
+pure-network scenarios (the Fig. 9 validation + network benchmarks); the
+cloud engine uses the same indexing convention for PM/repository NICs.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax.numpy as jnp
+
+from .sharing import SharingProblem
+
+
+class NetworkTopology(NamedTuple):
+    """n nodes; spreader layout: node i -> out = 2*i, in = 2*i + 1."""
+
+    in_bw: jnp.ndarray    # f32[n]  MB/s
+    out_bw: jnp.ndarray   # f32[n]  MB/s
+    latency: jnp.ndarray  # f32[n, n] seconds
+
+    @property
+    def num_nodes(self) -> int:
+        return self.in_bw.shape[0]
+
+    def out_idx(self, i):
+        return 2 * i
+
+    def in_idx(self, i):
+        return 2 * i + 1
+
+    def spreader_perf(self) -> jnp.ndarray:
+        n = self.num_nodes
+        perf = jnp.zeros((2 * n,), jnp.float32)
+        perf = perf.at[2 * jnp.arange(n)].set(self.out_bw)
+        perf = perf.at[2 * jnp.arange(n) + 1].set(self.in_bw)
+        return perf
+
+
+def make_topology(in_bw: Sequence[float], out_bw: Sequence[float],
+                  latency: float | Sequence[Sequence[float]] = 0.0
+                  ) -> NetworkTopology:
+    in_bw = jnp.asarray(in_bw, jnp.float32)
+    out_bw = jnp.asarray(out_bw, jnp.float32)
+    n = in_bw.shape[0]
+    lat = jnp.asarray(latency, jnp.float32)
+    if lat.ndim == 0:
+        lat = jnp.full((n, n), lat)
+    return NetworkTopology(in_bw=in_bw, out_bw=out_bw, latency=lat)
+
+
+def transfers_problem(
+    topo: NetworkTopology,
+    src: Sequence[int],
+    dst: Sequence[int],
+    size_mb: Sequence[float],
+    *,
+    t_register: Sequence[float] | None = None,
+    route_cap: Sequence[float] | None = None,
+) -> SharingProblem:
+    """Build a sharing problem for a set of point-to-point transfers.
+
+    ``route_cap`` models intermediary routers by capping each transfer's
+    ``p_l`` at the narrowest link on its route.
+    """
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    size = jnp.asarray(size_mb, jnp.float32)
+    C = size.shape[0]
+    t_reg = (jnp.zeros((C,), jnp.float32) if t_register is None
+             else jnp.asarray(t_register, jnp.float32))
+    t_start = t_reg + topo.latency[src, dst]
+    limit = (None if route_cap is None
+             else jnp.asarray(route_cap, jnp.float32))
+    return SharingProblem.build(
+        perf=topo.spreader_perf(),
+        provider=2 * src,       # source out-spreader
+        consumer=2 * dst + 1,   # target in-spreader
+        amount=size,
+        limit=limit,
+        t_start=t_start,
+    )

@@ -1,0 +1,152 @@
+"""Block-wise (flash) attention Pallas kernel for training/prefill.
+
+TPU-native tiling: the grid is ``(B*Hq, Tq/BQ, Tk/BK)`` with the KV axis
+innermost; online-softmax running state (row max ``m``, normaliser ``l``,
+accumulator ``acc``) lives in VMEM scratch across the KV sweep.  Each step
+is two MXU matmuls — ``(BQ,D)@(D,BK)`` logits and ``(BQ,BK)@(BK,D)`` value
+gather — with the mask (causal / sliding-window / bidirectional-prefix) and
+gemma2-style tanh soft-capping fused between them.  Fully-masked KV blocks
+are skipped with ``pl.when`` (a causal lower-triangle sweep does ~2x less
+work than dense).
+
+Supports GQA natively: KV tiles are indexed by ``head // group`` so grouped
+query heads reuse the same KV stream without materialising repeats.
+
+Decode (Tq=1, traced cache offset) intentionally stays on the pure-jnp path
+(`ref.attention_ref`): single-token attention is HBM-bandwidth-bound, the
+MXU tiles would be idle, and the traced offset would force scalar prefetch
+for no gain.  DESIGN.md §Kernels records this hardware-adaptation choice.
+
+Oracle: :func:`repro.kernels.ref.attention_ref`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window: int, softcap: float,
+            prefix_len: int, q_offset: int, bq: int, bk: int, n_kb: int,
+            t_q: int, t_k: int):
+    qb = pl.program_id(1)
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q0 = qb * bq + q_offset           # absolute position of this q tile
+    k0 = kb * bk
+    # Static-shape dynamic skip: block contributes iff some (q,k) pair is
+    # visible.  Causal: k0 <= q_tile_max; window: k_tile_max > q0 - window;
+    # prefix rescues blocks below prefix_len.
+    needed = jnp.bool_(True)
+    if causal:
+        needed = needed & (k0 <= q0 + bq - 1)
+    if window > 0:
+        vis = (k0 + bk - 1) > (q0 - window)
+        if prefix_len > 0:
+            vis = vis | (k0 < prefix_len)
+        needed = needed & vis
+
+    @pl.when(needed)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)   # (BQ, D)
+        k = k_ref[0].astype(jnp.float32)   # (BK, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = q0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < t_k                       # drop padded keys
+        if causal:
+            cm = kpos <= qpos
+            if window > 0:
+                cm = cm & (kpos > qpos - window)
+            if prefix_len > 0:
+                cm = cm | (kpos < prefix_len)
+            mask = mask & cm
+        s = jnp.where(mask, s, _NEG)
+        m_prev = m_ref[...]                     # (BQ, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(kb == n_kb - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "prefix_len", "q_offset",
+                     "scale", "interpret", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    prefix_len=0, q_offset=0, scale=None, interpret=False,
+                    block_q=128, block_k=128):
+    B, Tq, Hq, D = q.shape
+    _, Tk, Hkv, _ = k.shape
+    g = Hq // Hkv
+    scale = float(D ** -0.5) if scale is None else float(scale)
+
+    bq = min(block_q, max(8, -(-Tq // 8) * 8))
+    bk = min(block_k, max(128, -(-Tk // 128) * 128))
+    Tq_pad = -(-Tq // bq) * bq
+    Tk_pad = -(-Tk // bk) * bk
+    D_pad = max(-(-D // 128) * 128, 128)
+
+    def prep(x, T_pad, H):
+        x = jnp.pad(x, ((0, 0), (0, T_pad - x.shape[1]), (0, 0),
+                        (0, D_pad - D)))
+        return x.transpose(0, 2, 1, 3).reshape(B * H, T_pad, D_pad)
+
+    q2, k2, v2 = prep(q, Tq_pad, Hq), prep(k, Tk_pad, Hkv), prep(v, Tk_pad, Hkv)
+    n_qb = Tq_pad // bq
+    n_kb = Tk_pad // bk
+
+    kern = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window, softcap=softcap,
+        prefix_len=prefix_len, q_offset=q_offset, bq=bq, bk=bk, n_kb=n_kb,
+        t_q=Tq, t_k=Tk)
+    out = pl.pallas_call(
+        kern,
+        grid=(B * Hq, n_qb, n_kb),
+        in_specs=[
+            pl.BlockSpec((1, bq, D_pad), lambda bh, qb, kb: (bh, qb, 0)),
+            pl.BlockSpec((1, bk, D_pad),
+                         lambda bh, qb, kb: ((bh // Hq) * Hkv
+                                             + (bh % Hq) // g, kb, 0)),
+            pl.BlockSpec((1, bk, D_pad),
+                         lambda bh, qb, kb: ((bh // Hq) * Hkv
+                                             + (bh % Hq) // g, kb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D_pad), lambda bh, qb, kb: (bh, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Tq_pad, D_pad), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D_pad), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q2, k2, v2)
+    out = out.reshape(B, Hq, Tq_pad, D_pad)[:, :, :Tq, :D]
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,117 @@
+"""Pallas TPU kernel for the progressive-filling round statistics.
+
+The max-min fair-share computation (paper §3.2.3) is DISSECT-CF's hot loop:
+every scheduling event re-runs a handful of *segmented reductions* over all
+live resource consumptions (committed rate and unfrozen count per spreader).
+On a pointer machine these are hash-map walks; the TPU-native form is a
+block-tiled **one-hot matmul**: a (1x128)x(128x128) MXU contraction per
+consumption row maps each flow's rate/flag onto its spreader column.
+
+Tiling: consumptions are padded to (CB=8x128) row-blocks, spreaders to
+(SB=128) lane-blocks.  Grid = (S/SB, C/CB) with the consumption axis
+innermost; per-spreader accumulators live in a VMEM scratch that persists
+across the consumption sweep (initialised when cb==0, finalised into the
+headroom outputs when cb==n_cb-1).  VMEM footprint per step: 3 input tiles
+(8x128 f32/i32) + 2 one-hot tiles (128x128) + (6,128) scratch — ~200 KB.
+
+Validated against :func:`repro.kernels.ref.fill_stats_ref` in interpret
+mode (CPU) over shape/degeneracy sweeps; on TPU the same code compiles via
+Mosaic (target hardware: v5e).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_BIG = 3.0e38     # python literal: jnp scalars would be captured consts
+ROWS = 8          # sublane rows per consumption block
+LANES = 128       # lane width
+CB = ROWS * LANES  # consumptions per block
+SB = 128          # spreaders per block
+
+
+def _kernel(prov_ref, cons_ref, rl_ref, uf_ref, perf_ref,
+            dp_ref, dc_ref, acc_ref, *, n_cb: int):
+    sb = pl.program_id(0)
+    cb = pl.program_id(1)
+
+    @pl.when(cb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    s_ids = sb * SB + jax.lax.broadcasted_iota(jnp.int32, (1, SB), 1)
+    prov = prov_ref[...]
+    cons = cons_ref[...]
+    rl = rl_ref[...]
+    uf = uf_ref[...]
+
+    acc = acc_ref[...]
+    # one MXU contraction per sublane row: (1,LANES) @ (LANES,SB)
+    for row in range(ROWS):
+        eqp = (prov[row][:, None] == s_ids).astype(jnp.float32)  # (LANES, SB)
+        eqc = (cons[row][:, None] == s_ids).astype(jnp.float32)
+        rrow = rl[row][None, :]   # (1, LANES)
+        urow = uf[row][None, :]
+        acc = acc.at[0:1, :].add(jnp.dot(rrow, eqp,
+                                         preferred_element_type=jnp.float32))
+        acc = acc.at[1:2, :].add(jnp.dot(rrow, eqc,
+                                         preferred_element_type=jnp.float32))
+        acc = acc.at[2:3, :].add(jnp.dot(urow, eqp,
+                                         preferred_element_type=jnp.float32))
+        acc = acc.at[3:4, :].add(jnp.dot(urow, eqc,
+                                         preferred_element_type=jnp.float32))
+    acc_ref[...] = acc
+
+    @pl.when(cb == n_cb - 1)
+    def _finalize():
+        a = acc_ref[...]
+        perf = perf_ref[...]            # (1, SB)
+        committed_p, committed_c = a[0:1, :], a[1:2, :]
+        cnt_p, cnt_c = a[2:3, :], a[3:4, :]
+        avail_p = jnp.maximum(perf - committed_p, 0.0)
+        avail_c = jnp.maximum(perf - committed_c, 0.0)
+        dp_ref[...] = jnp.where(cnt_p > 0,
+                                avail_p / jnp.maximum(cnt_p, 1.0), _BIG)
+        dc_ref[...] = jnp.where(cnt_c > 0,
+                                avail_c / jnp.maximum(cnt_c, 1.0), _BIG)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fill_stats(provider, consumer, r, live, unfrozen, perf, *,
+               interpret: bool = False):
+    """Drop-in replacement for :func:`repro.kernels.ref.fill_stats_ref`."""
+    C = provider.shape[0]
+    S = perf.shape[0]
+    C_pad = max(-(-C // CB) * CB, CB)
+    S_pad = max(-(-S // SB) * SB, SB)
+
+    def pad_c(x, fill):
+        return jnp.pad(x, (0, C_pad - C), constant_values=fill)
+
+    # padded flows point at the (padded) spreader S_pad-1 with zero weight
+    prov2 = pad_c(provider.astype(jnp.int32), S_pad - 1).reshape(-1, LANES)
+    cons2 = pad_c(consumer.astype(jnp.int32), S_pad - 1).reshape(-1, LANES)
+    rl2 = pad_c(jnp.where(live, r, 0.0).astype(jnp.float32), 0.0
+                ).reshape(-1, LANES)
+    uf2 = pad_c(unfrozen.astype(jnp.float32), 0.0).reshape(-1, LANES)
+    perf2 = jnp.pad(perf.astype(jnp.float32), (0, S_pad - S)
+                    ).reshape(-1, LANES)
+
+    n_sb = S_pad // SB
+    n_cb = C_pad // CB
+    flow_spec = pl.BlockSpec((ROWS, LANES), lambda sb, cb: (cb, 0))
+    sprd_spec = pl.BlockSpec((1, LANES), lambda sb, cb: (sb, 0))
+    dp, dc = pl.pallas_call(
+        functools.partial(_kernel, n_cb=n_cb),
+        grid=(n_sb, n_cb),
+        in_specs=[flow_spec, flow_spec, flow_spec, flow_spec, sprd_spec],
+        out_specs=[sprd_spec, sprd_spec],
+        out_shape=[jax.ShapeDtypeStruct((n_sb, LANES), jnp.float32)] * 2,
+        scratch_shapes=[pltpu.VMEM((8, SB), jnp.float32)],
+        interpret=interpret,
+    )(prov2, cons2, rl2, uf2, perf2)
+    return dp.reshape(-1)[:S], dc.reshape(-1)[:S]

@@ -1,0 +1,42 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+Each op auto-selects ``interpret=True`` off-TPU (this container is
+CPU-only; interpret mode executes the kernel body faithfully) and compiles
+via Mosaic on real TPUs.  ``FORCE_INTERPRET`` can be toggled for tests.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+FORCE_INTERPRET: bool | None = None
+
+
+def _interpret() -> bool:
+    if FORCE_INTERPRET is not None:
+        return FORCE_INTERPRET
+    return jax.default_backend() != "tpu"
+
+
+def fill_stats_pallas(provider, consumer, r, live, unfrozen, perf):
+    """Progressive-filling round statistics (see kernels/maxmin.py)."""
+    from . import maxmin
+    return maxmin.fill_stats(provider, consumer, r, live, unfrozen, perf,
+                             interpret=_interpret())
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    prefix_len=0, q_offset=0, scale=None):
+    """Block-wise attention (see kernels/attention.py)."""
+    from . import attention
+    return attention.flash_attention(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        prefix_len=prefix_len, q_offset=q_offset, scale=scale,
+        interpret=_interpret())
+
+
+def linear_scan(a, x, h0=None):
+    """Chunked diagonal linear recurrence (see kernels/ssm.py)."""
+    from . import ssm
+    return ssm.linear_scan(a, x, h0, interpret=_interpret())

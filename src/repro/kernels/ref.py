@@ -1,0 +1,101 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth its kernel is tested against
+(tests/test_kernels.py sweeps shapes/dtypes and asserts allclose).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_BIG = jnp.float32(3.0e38)
+
+
+# ---------------------------------------------------------------------------
+# maxmin progressive-filling round statistics (paper §3.2.3 hot loop)
+# ---------------------------------------------------------------------------
+
+def fill_stats_ref(provider, consumer, r, live, unfrozen, perf):
+    """Per-spreader headroom for one progressive-filling round.
+
+    Returns (dp, dc): f32[S] per-spreader increment headroom
+    ``max(perf - committed, 0) / count_unfrozen`` (``_BIG`` where no
+    unfrozen flow touches the spreader).
+    """
+    S = perf.shape[0]
+    rl = jnp.where(live, r, 0.0)
+    uf = unfrozen.astype(jnp.float32)
+    committed_p = jax.ops.segment_sum(rl, provider, num_segments=S)
+    committed_c = jax.ops.segment_sum(rl, consumer, num_segments=S)
+    cnt_p = jax.ops.segment_sum(uf, provider, num_segments=S)
+    cnt_c = jax.ops.segment_sum(uf, consumer, num_segments=S)
+    avail_p = jnp.maximum(perf - committed_p, 0.0)
+    avail_c = jnp.maximum(perf - committed_c, 0.0)
+    dp = jnp.where(cnt_p > 0, avail_p / jnp.maximum(cnt_p, 1.0), _BIG)
+    dc = jnp.where(cnt_c > 0, avail_c / jnp.maximum(cnt_c, 1.0), _BIG)
+    return dp, dc
+
+
+# ---------------------------------------------------------------------------
+# attention (used by the LM stack): GQA + causal/window/softcap/prefix-LM
+# ---------------------------------------------------------------------------
+
+def attention_ref(
+    q: jax.Array,          # [B, Tq, Hq, D]
+    k: jax.Array,          # [B, Tk, Hkv, D]
+    v: jax.Array,          # [B, Tk, Hkv, D]
+    *,
+    causal: bool = True,
+    window: int = 0,        # >0: sliding window (tokens attend back w-1)
+    softcap: float = 0.0,   # >0: tanh logit soft-capping (gemma2)
+    prefix_len: int = 0,    # >0: bidirectional prefix (paligemma)
+    scale: float | None = None,
+    q_offset: int = 0,      # absolute position of q[0] (decode with cache)
+) -> jax.Array:
+    B, Tq, Hq, D = q.shape
+    _, Tk, Hkv, _ = k.shape
+    g = Hq // Hkv
+    scale = (D ** -0.5) if scale is None else scale
+    qr = q.reshape(B, Tq, Hkv, g, D)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qr.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qpos = jnp.arange(Tq) + q_offset
+    kpos = jnp.arange(Tk)
+    mask = jnp.ones((Tq, Tk), bool)
+    if causal:
+        mask = kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        mask = mask & (kpos[None, :] > qpos[:, None] - window)
+    if prefix_len > 0:
+        mask = mask | (kpos[None, :] < prefix_len)
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Tq, Hq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# diagonal linear recurrence (mamba/rwkv6 time-mixing backbone)
+# ---------------------------------------------------------------------------
+
+def linear_scan_ref(a: jax.Array, x: jax.Array,
+                    h0: jax.Array | None = None) -> jax.Array:
+    """h_t = a_t * h_{t-1} + x_t over axis 1; returns all h_t.
+
+    Shapes: a, x: [B, T, D]; h0: [B, D] (zeros if None).  f32 accumulation.
+    """
+    B, T, D = x.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, D), jnp.float32)
+
+    def step(h, ax):
+        a_t, x_t = ax
+        h = a_t * h + x_t
+        return h, h
+
+    a32 = jnp.swapaxes(a.astype(jnp.float32), 0, 1)
+    x32 = jnp.swapaxes(x.astype(jnp.float32), 0, 1)
+    _, hs = jax.lax.scan(step, h0.astype(jnp.float32), (a32, x32))
+    return jnp.swapaxes(hs, 0, 1).astype(x.dtype)

@@ -1,0 +1,93 @@
+"""Chunked diagonal linear recurrence Pallas kernel (mamba / rwkv6 backbone).
+
+Both Jamba's Mamba layers and RWKV6's WKV time-mixing reduce to the
+diagonal recurrence ``h_t = a_t * h_{t-1} + x_t`` over flattened
+(channel x state) lanes — see models/ssm.py for the lowering.  GPUs
+implement this with warp-level parallel scans; the TPU-native adaptation
+keeps the time axis sequential *inside* the kernel (a VREG-resident carry,
+``fori_loop`` over the chunk) and exposes parallelism across the
+``(batch, lane-block)`` grid plus the innermost chunked-time axis whose
+carry lives in VMEM scratch.  Lanes are 128-wide vector ops — the VPU is
+fully occupied whenever ``D >= 128 * cores``; no MXU involvement, which is
+correct for a bandwidth-bound recurrence.
+
+Grid: ``(B, D/BD, T/BT)``, T innermost; the chunk carry persists in
+scratch across T blocks.  Padded timesteps use ``a=1, x=0`` (identity), so
+the final-state output is exact regardless of padding.
+
+Oracle: :func:`repro.kernels.ref.linear_scan_ref`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, x_ref, h0_ref, y_ref, hlast_ref, h_scr, *,
+            bt: int, n_tb: int):
+    tb = pl.program_id(2)
+
+    @pl.when(tb == 0)
+    def _init():
+        h_scr[...] = h0_ref[...].astype(jnp.float32)
+
+    def step(t, h):  # h: (1, BD) f32
+        a_t = pl.load(a_ref, (0, pl.ds(t, 1), slice(None))).astype(jnp.float32)
+        x_t = pl.load(x_ref, (0, pl.ds(t, 1), slice(None))).astype(jnp.float32)
+        h = a_t * h + x_t
+        pl.store(y_ref, (0, pl.ds(t, 1), slice(None)),
+                 h.astype(y_ref.dtype))
+        return h
+
+    h = jax.lax.fori_loop(0, bt, step, h_scr[...])
+    h_scr[...] = h
+
+    @pl.when(tb == n_tb - 1)
+    def _done():
+        hlast_ref[...] = h.astype(hlast_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_t", "block_d"))
+def linear_scan(a, x, h0=None, *, interpret=False, block_t=256, block_d=128):
+    """Returns (y, h_last): all states and the final state (f32 carry)."""
+    B, T, D = x.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, D), jnp.float32)
+    bt = min(block_t, max(8, -(-T // 8) * 8))
+    bd = min(block_d, max(128, -(-D // 128) * 128))
+    T_pad = -(-T // bt) * bt
+    D_pad = -(-D // bd) * bd
+    a2 = jnp.pad(a, ((0, 0), (0, T_pad - T), (0, D_pad - D)),
+                 constant_values=1.0)
+    # identity steps for padded tail: a=1 above, x=0 below
+    a2 = a2.at[:, T:, :].set(1.0) if T_pad > T else a2
+    x2 = jnp.pad(x, ((0, 0), (0, T_pad - T), (0, D_pad - D)))
+    h02 = jnp.pad(h0, ((0, 0), (0, D_pad - D)))
+
+    n_tb = T_pad // bt
+    n_db = D_pad // bd
+    kern = functools.partial(_kernel, bt=bt, n_tb=n_tb)
+    y, hlast = pl.pallas_call(
+        kern,
+        grid=(B, n_db, n_tb),
+        in_specs=[
+            pl.BlockSpec((1, bt, bd), lambda b, db, tb: (b, tb, db)),
+            pl.BlockSpec((1, bt, bd), lambda b, db, tb: (b, tb, db)),
+            pl.BlockSpec((1, bd), lambda b, db, tb: (b, db)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bt, bd), lambda b, db, tb: (b, tb, db)),
+            pl.BlockSpec((1, bd), lambda b, db, tb: (b, db)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T_pad, D_pad), x.dtype),
+            jax.ShapeDtypeStruct((B, D_pad), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, bd), jnp.float32)],
+        interpret=interpret,
+    )(a2, x2, h02)
+    return y[:, :T, :D], hlast[:, :D]

@@ -1,0 +1,338 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is how the distribution config is proven coherent without hardware:
+for each cell we build the *abstract* arguments (ShapeDtypeStructs — no
+allocation), the sharding specs from the rule tables, and run
+
+    jax.jit(step, in_shardings=..., out_shardings=..., donate...)
+        .lower(*abstract).compile()
+
+on the 16x16 single-pod mesh and the 2x16x16 multi-pod mesh.  From the
+compiled artifact we record ``memory_analysis()`` (proves HBM fit),
+``cost_analysis()`` (FLOPs / bytes for the roofline) and the collective
+bytes parsed from the optimized HLO (all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute operand sizes).
+
+Results land as one JSON per cell under ``experiments/dryrun/`` and are
+aggregated by ``benchmarks/roofline.py`` into EXPERIMENTS.md tables.
+
+CPU-only container notes: kernels stay on the pure-jnp path (Mosaic needs
+real TPUs; interpret mode would unroll the grid into the HLO), and the
+512 "devices" are XLA host-platform placeholders — sharding, collectives
+and memory accounting are exactly what the real mesh would see.
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.shapes import SHAPES, input_specs, skip_reason
+from repro.dist import sharding as shd
+from repro.launch import hlo_cost
+from repro.launch.mesh import make_mesh, make_production_mesh
+from repro.models import common as cm
+from repro.models import lm
+from repro.train import step as train_step_mod
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64"
+                       r"|f64|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(m: re.Match) -> int:
+    dt, dims = m.group(1), m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective operand bytes summed over the optimized HLO."""
+    out = {k: {"bytes": 0, "count": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        # op kind appears right after the result shape: `%x = f32[..] kind(`
+        for kind in _COLLECTIVES:
+            tag = f" {kind}("
+            if tag in s and not s.startswith("//"):
+                lhs, rhs = s.split(tag, 1)
+                # operand shapes (typed operand list) if present, else result
+                op_shapes = list(_SHAPE_RE.finditer(rhs.split(")")[0]))
+                if op_shapes:
+                    b = sum(_shape_bytes(m) for m in op_shapes)
+                else:
+                    res = list(_SHAPE_RE.finditer(lhs))
+                    b = sum(_shape_bytes(m) for m in res)
+                out[kind]["bytes"] += b
+                out[kind]["count"] += 1
+                break
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def active_params(cfg) -> tuple[int, int]:
+    """(total, active) parameter counts; active scales expert weights by
+    top_k/n_experts (the 6*N_active*D MoE convention)."""
+    spec = lm.lm_spec(cfg)
+    total = cm.count_params(spec)
+    if cfg.n_experts and cfg.top_k:
+        expert = 0
+        for blk in spec["blocks"]:
+            ffn = blk.get("ffn", {})
+            for name in ("w_gu", "w_down"):
+                if name in ffn and "experts" in ffn[name].axes:
+                    k = 1
+                    for s in ffn[name].shape:
+                        k *= s
+                    expert += k
+        active = total - expert + expert * cfg.top_k // cfg.n_experts
+    else:
+        active = total
+    return total, active
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N_active*D for training, 2*N_active*D for inference steps."""
+    total, active = active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.batch * shape.seq
+        return 6.0 * active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.batch * shape.seq
+        return 2.0 * active * tokens
+    return 2.0 * active * shape.batch  # decode: one token per sequence
+
+
+# ---------------------------------------------------------------------------
+# Cell construction
+# ---------------------------------------------------------------------------
+
+
+def build_cell(cfg, shape, mesh, *, accum: int = 8, rules_train=None,
+               rules_serve=None, xent_chunk: int = 512):
+    """Returns (fn, abstract_args, in_shardings, out_shardings, donate)."""
+    rules_train = rules_train or shd.TRAIN_RULES
+    rules_serve = rules_serve or shd.SERVE_RULES
+    specs = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        batch_abs = specs["batch"]
+        state_abs = train_step_mod.abstract_state(cfg)
+        state_ax = train_step_mod.state_axes(cfg)
+        state_sh = shd.tree_shardings(state_ax, state_abs, mesh, rules_train)
+        batch_sh = shd.tree_shardings(shd.batch_axes(batch_abs), batch_abs,
+                                      mesh, rules_train)
+        step = train_step_mod.make_train_step(cfg, accum=accum,
+                                              xent_chunk=xent_chunk)
+        rep = shd.replicated(mesh)
+        metrics_sh = {k: rep for k in ("loss", "tokens", "moe_lb", "moe_z",
+                                       "moe_dropped", "lr", "grad_norm",
+                                       "step")}
+        return (step, (state_abs, batch_abs), (state_sh, batch_sh),
+                (state_sh, metrics_sh), (0,))
+
+    params_abs = cm.abstract(lm.lm_spec(cfg), dtype=cfg.cdtype)
+    params_ax = cm.logical_axes(lm.lm_spec(cfg))
+    params_sh = shd.tree_shardings(params_ax, params_abs, mesh, rules_serve)
+    rep = shd.replicated(mesh)
+
+    if shape.kind == "prefill":
+        batch_abs = specs["batch"]
+        cache_abs = specs["cache"]
+        enc_len = (shape.seq if cfg.is_encdec else 0)
+        cache_ax = lm.cache_axes(cfg, shape.batch, shape.seq,
+                                 enc_len=enc_len)
+        cache_sh = shd.tree_shardings(cache_ax, cache_abs, mesh, rules_serve)
+        batch_sh = shd.tree_shardings(shd.batch_axes(batch_abs), batch_abs,
+                                      mesh, rules_serve)
+
+        def fn(params, batch, cache):
+            return lm.prefill(cfg, params, batch, cache)
+
+        logits_sh = rep
+        return (fn, (params_abs, batch_abs, cache_abs),
+                (params_sh, batch_sh, cache_sh), (logits_sh, cache_sh), (2,))
+
+    # decode
+    tok_abs = specs["tokens"]
+    cache_abs = specs["cache"]
+    enc_len = (configs.shapes.ENCDEC_DECODE_SRC if cfg.is_encdec else 0)
+    cache_ax = lm.cache_axes(cfg, shape.batch, shape.seq, enc_len=enc_len)
+    cache_sh = shd.tree_shardings(cache_ax, cache_abs, mesh, rules_serve)
+    tok_sh = shd.tree_shardings({"tokens": ("batch", None)},
+                                {"tokens": tok_abs}, mesh,
+                                rules_serve)["tokens"]
+
+    def fn(params, tokens, cache):
+        return lm.decode_step(cfg, params, tokens, cache)
+
+    return (fn, (params_abs, tok_abs, cache_abs),
+            (params_sh, tok_sh, cache_sh), (rep, cache_sh), (2,))
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, *,
+             mesh=None, accum: int = 8, cfg_overrides=None,
+             rules_train=None, rules_serve=None,
+             save_hlo_to=None) -> dict:
+    """Lower + compile one cell; returns the result record."""
+    cfg = configs.get(arch, **(cfg_overrides or {}))
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "ok": False}
+    skip = skip_reason(cfg, shape)
+    if skip:
+        rec.update(skipped=skip, ok=True)
+        return rec
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    total, active = active_params(cfg)
+    rec.update(params_total=total, params_active=active,
+               model_flops=model_flops(cfg, shape),
+               mesh_shape={k: int(v) for k, v in mesh.shape.items()})
+    if cfg_overrides:
+        rec["cfg_overrides"] = dict(cfg_overrides)
+
+    fn, args, in_sh, out_sh, donate = build_cell(
+        cfg, shape, mesh, accum=accum, rules_train=rules_train,
+        rules_serve=rules_serve)
+    act_rules = ((rules_train or shd.TRAIN_RULES) if shape.kind == "train"
+                 else (rules_serve or shd.SERVE_RULES))
+    t0 = time.time()
+    jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=donate)
+    with shd.act_ctx(mesh, act_rules):
+        lowered = jitted.lower(*args)
+    rec["lower_s"] = round(time.time() - t0, 2)
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 2)
+
+    ca = compiled.cost_analysis() or {}
+    rec["cost_analysis"] = {k: float(v) for k, v in ca.items()
+                            if isinstance(v, (int, float))
+                            and k in ("flops", "bytes accessed",
+                                      "optimal_seconds", "utilization")}
+    ma = compiled.memory_analysis()
+    if ma is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(ma, k, None)
+            if v is not None:
+                rec.setdefault("memory", {})[k] = int(v)
+    hlo = compiled.as_text()
+    rec["collectives"] = collective_bytes(hlo)   # raw, no trip scaling
+    rec["hlo_cost"] = hlo_cost.analyze(hlo)      # trip-count-aware walker
+    rec["hlo_bytes"] = len(hlo)
+    if save_hlo_to is not None:
+        import gzip
+        with gzip.open(save_hlo_to, "wt") as f:
+            f.write(hlo)
+    rec["ok"] = True
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="Multi-pod dry-run: lower+compile every cell")
+    ap.add_argument("--arch", default="all",
+                    help="arch id, comma list, or 'all'")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single,multi",
+                    help="'single', 'multi', or custom 'AxB' / 'AxBxC'")
+    ap.add_argument("--accum", type=int, default=8)
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--tag", default="", help="suffix for result files")
+    ap.add_argument("--save-hlo", action="store_true",
+                    help="stash gzip'd optimized HLO next to each JSON")
+    ap.add_argument("--set", action="append", default=[],
+                    help="ModelConfig override key=value (hillclimb knob)")
+    ap.add_argument("--train-rules", default="train",
+                    choices=sorted(shd.RULE_SETS))
+    ap.add_argument("--serve-rules", default="serve",
+                    choices=sorted(shd.RULE_SETS))
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        if v in ("True", "False"):
+            v = v == "True"
+        overrides[k] = v
+
+    archs = list(configs.ARCHS) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = args.mesh.split(",")
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    failures = 0
+    for mesh_name in meshes:
+        if mesh_name == "single":
+            mesh = make_production_mesh(multi_pod=False)
+        elif mesh_name == "multi":
+            mesh = make_production_mesh(multi_pod=True)
+        else:
+            dims = tuple(int(x) for x in mesh_name.split("x"))
+            names = ("pod", "data", "model")[-len(dims):]
+            mesh = make_mesh(dims, names)
+        for arch in archs:
+            for shape_name in shapes:
+                tag = f"{arch}_{shape_name}_{mesh_name}{args.tag}"
+                path = outdir / f"{tag}.json"
+                try:
+                    rec = run_cell(arch, shape_name, mesh_name, mesh=mesh,
+                                   accum=args.accum,
+                                   cfg_overrides=overrides,
+                                   rules_train=shd.RULE_SETS[args.train_rules],
+                                   rules_serve=shd.RULE_SETS[args.serve_rules],
+                                   save_hlo_to=(outdir / f"{tag}.hlo.gz"
+                                                if args.save_hlo else None))
+                except Exception as e:  # record, keep going
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "ok": False,
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-4000:]}
+                path.write_text(json.dumps(rec, indent=1))
+                status = ("SKIP" if rec.get("skipped")
+                          else ("ok" if rec["ok"] else "FAIL"))
+                extra = ""
+                if rec.get("cost_analysis"):
+                    extra = (f" flops={rec['cost_analysis'].get('flops', 0):.3e}"
+                             f" compile={rec.get('compile_s')}s")
+                print(f"[{status}] {tag}{extra}", flush=True)
+                failures += 0 if rec["ok"] else 1
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,153 @@
+"""Core scaled-dot-product attention with three interchangeable backends.
+
+* ``impl="chunked"`` — pure-jnp flash-style attention: ``lax.map`` over query
+  chunks, ``lax.scan`` with online softmax over KV chunks.  Peak live logits
+  are ``(B, q_chunk, Hq, k_chunk)`` regardless of sequence length, which is
+  what lets the 32k-prefill / 512k-decode dry-runs fit in HBM.  This is also
+  the semantic oracle for the Pallas kernel.
+* ``impl="pallas"`` — :func:`repro.kernels.attention.flash_attention`
+  (TPU Mosaic; interpret-mode on CPU, used by kernel tests only).
+* ``impl="naive"`` — materialises the full score matrix (small tests).
+
+Features (uniform across backends): GQA (grouped KV heads), causal masking
+with a query offset (decode), sliding windows (gemma2 local layers), tanh
+logit soft-capping, bidirectional prefixes (paligemma), and a *traced* valid
+KV length for decode against a preallocated cache.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG = jnp.float32(-1e30)
+
+
+def _mask(qpos, kpos, *, causal, window, prefix_len, kv_len):
+    """Boolean visibility mask [..., Tq, Tk] from absolute positions."""
+    m = jnp.ones(qpos.shape[:-1] + (qpos.shape[-1], kpos.shape[-1]), bool)
+    qp = qpos[..., :, None]
+    kp = kpos[..., None, :]
+    if causal:
+        c = kp <= qp
+        if window and window > 0:
+            c = c & (kp > qp - window)
+        if prefix_len and prefix_len > 0:
+            c = c | (kp < prefix_len)
+        m = m & c
+    if kv_len is not None:
+        m = m & (kp < kv_len)
+    return m
+
+
+def naive_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    prefix_len=0, q_offset=0, scale=None, kv_len=None):
+    B, Tq, Hq, D = q.shape
+    _, Tk, Hkv, _ = k.shape
+    g = Hq // Hkv
+    scale = (D ** -0.5) if scale is None else scale
+    qr = q.reshape(B, Tq, Hkv, g, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qr.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap and softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(Tq) + q_offset
+    kpos = jnp.arange(Tk)
+    m = _mask(qpos, kpos, causal=causal, window=window, prefix_len=prefix_len,
+              kv_len=kv_len)
+    s = jnp.where(m[None, None, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Tq, Hq, D).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                      prefix_len=0, q_offset=0, scale=None, kv_len=None,
+                      q_chunk=512, k_chunk=1024):
+    """Flash-style two-level chunked attention (see module docstring)."""
+    B, Tq, Hq, D = q.shape
+    _, Tk, Hkv, _ = k.shape
+    g = Hq // Hkv
+    scale = (D ** -0.5) if scale is None else scale
+
+    cq = min(q_chunk, Tq)
+    ck = min(k_chunk, Tk)
+    Tq_p = -(-Tq // cq) * cq
+    Tk_p = -(-Tk // ck) * ck
+    qp = jnp.pad(q, ((0, 0), (0, Tq_p - Tq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, Tk_p - Tk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Tk_p - Tk), (0, 0), (0, 0)))
+    nq, nk = Tq_p // cq, Tk_p // ck
+    # true-length mask: padded keys must never win
+    klen = jnp.minimum(jnp.asarray(Tk), kv_len) if kv_len is not None else Tk
+
+    qs = qp.reshape(B, nq, cq, Hkv, g, D).transpose(1, 0, 2, 3, 4, 5)
+    ks = kp.reshape(B, nk, ck, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vs = vp.reshape(B, nk, ck, Hkv, D).transpose(1, 0, 2, 3, 4)
+
+    def per_q(args):
+        qc, qi = args                       # (B, cq, Hkv, g, D), scalar
+        q32 = qc.astype(jnp.float32) * scale
+        qpos = q_offset + qi * cq + jnp.arange(cq)
+
+        def kv_step(carry, inp):
+            m_run, l_run, acc = carry
+            kc, vc, ki = inp
+            s = jnp.einsum("bqhgd,bkhd->bqhgk", q32, kc.astype(jnp.float32))
+            if softcap and softcap > 0:
+                s = softcap * jnp.tanh(s / softcap)
+            kpos = ki * ck + jnp.arange(ck)
+            msk = _mask(qpos, kpos, causal=causal, window=window,
+                        prefix_len=prefix_len, kv_len=klen)  # (cq, ck)
+            s = jnp.where(msk[None, :, None, None, :], s, NEG)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(msk[None, :, None, None, :], p, 0.0)
+            alpha = jnp.exp(m_run - m_new)
+            l_new = l_run * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bqhgk,bkhd->bqhgd", p, vc.astype(jnp.float32))
+            return (m_new, l_new, acc), None
+
+        init = (jnp.full((B, cq, Hkv, g), NEG),
+                jnp.zeros((B, cq, Hkv, g), jnp.float32),
+                jnp.zeros((B, cq, Hkv, g, D), jnp.float32))
+        (m_run, l_run, acc), _ = jax.lax.scan(
+            kv_step, init, (ks, vs, jnp.arange(nk)))
+        out = acc / jnp.maximum(l_run, 1e-30)[..., None]
+        return out.astype(q.dtype)
+
+    if nq == 1:
+        out = per_q((qs[0], jnp.asarray(0)))[None]
+    else:
+        out = jax.lax.map(per_q, (qs, jnp.arange(nq)))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Tq_p, Hq, D)
+    return out[:, :Tq]
+
+
+def attention(q, k, v, *, causal=True, window=0, softcap=0.0, prefix_len=0,
+              q_offset=0, scale=None, kv_len=None, impl="chunked",
+              q_chunk=512, k_chunk=1024):
+    if impl == "pallas" and kv_len is None and isinstance(q_offset, int):
+        from repro.kernels import ops
+        return ops.flash_attention(q, k, v, causal=causal, window=window,
+                                   softcap=softcap, prefix_len=prefix_len,
+                                   q_offset=q_offset, scale=scale)
+    if impl == "naive":
+        return naive_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, prefix_len=prefix_len,
+                               q_offset=q_offset, scale=scale, kv_len=kv_len)
+    return chunked_attention(q, k, v, causal=causal, window=window,
+                             softcap=softcap, prefix_len=prefix_len,
+                             q_offset=q_offset, scale=scale, kv_len=kv_len,
+                             q_chunk=q_chunk, k_chunk=k_chunk)
+
+
+def cache_update(cache_k, cache_v, k_new, v_new, index):
+    """Write ``k_new/v_new`` [B, T, Hkv, D] into the cache at ``index``."""
+    ck = jax.lax.dynamic_update_slice(cache_k, k_new.astype(cache_k.dtype),
+                                      (0, index, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache_v, v_new.astype(cache_v.dtype),
+                                      (0, index, 0, 0))
+    return ck, cv

@@ -1,0 +1,210 @@
+"""Shared model-building blocks and the parameter-spec machinery.
+
+The framework keeps a *single source of truth* for every parameter: model
+code builds a pytree of :class:`ParamSpec` leaves (shape + logical axes +
+initializer).  From that one tree we derive
+
+* real parameters          — :func:`materialize` (CPU smoke tests, examples),
+* abstract parameters      — :func:`abstract` (the multi-pod dry-run lowers
+  against ``ShapeDtypeStruct``s, never allocating),
+* sharding specs           — :func:`repro.dist.sharding.tree_shardings`
+  maps the logical axes onto mesh axes by rule table.
+
+Logical axis vocabulary (see dist/sharding.py for the rule tables):
+``batch, seq, embed, q_heads, kv_heads, head, mlp, vocab, experts, cap,
+state, conv, layers``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declarative description of one parameter tensor."""
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]           # logical axis name per dim
+    init: str = "fan_in"                   # fan_in | normal | zeros | ones | const
+    scale: float = 1.0                     # stddev multiplier / const value
+    fan_in: int | None = None              # override fan-in for "fan_in"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def spec(shape, axes, init="fan_in", scale=1.0, fan_in=None) -> ParamSpec:
+    return ParamSpec(tuple(int(s) for s in shape), tuple(axes), init, scale,
+                     fan_in)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _tree_paths(tree, prefix=()):
+    if is_spec(tree):
+        yield prefix, tree
+    elif isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _tree_paths(tree[k], prefix + (k,))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _tree_paths(v, prefix + (str(i),))
+    else:
+        raise TypeError(f"bad spec tree node at {prefix}: {type(tree)}")
+
+
+def _map_specs(fn, tree):
+    return jax.tree.map(fn, tree, is_leaf=is_spec)
+
+
+def _init_leaf(ps: ParamSpec, key, dtype):
+    if ps.init == "zeros":
+        return jnp.zeros(ps.shape, dtype)
+    if ps.init == "ones":
+        return jnp.ones(ps.shape, dtype)
+    if ps.init == "const":
+        return jnp.full(ps.shape, ps.scale, dtype)
+    if ps.init == "normal":
+        std = ps.scale
+    elif ps.init == "fan_in":
+        fan = ps.fan_in
+        if fan is None:
+            fan = 1
+            for s in ps.shape[:-1]:
+                fan *= s
+            fan = max(fan, 1)
+        std = ps.scale * (fan ** -0.5)
+    else:
+        raise ValueError(ps.init)
+    return (jax.random.normal(key, ps.shape, jnp.float32) * std).astype(dtype)
+
+
+def materialize(tree, key: jax.Array, dtype=jnp.float32):
+    """Instantiate real parameters; per-leaf keys are path-folded with a
+    *stable* hash so the result is identical across processes/hosts
+    (Python's builtin ``hash`` is salted per process — using it here broke
+    multi-host determinism; caught by the elastic-restore test)."""
+    import zlib
+
+    def build(node, prefix=()):
+        if is_spec(node):
+            h = zlib.crc32("/".join(prefix).encode()) & 0x7FFFFFFF
+            return _init_leaf(node, jax.random.fold_in(key, h), dtype)
+        if isinstance(node, dict):
+            return {k: build(v, prefix + (k,)) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return [build(v, prefix + (str(i),)) for i, v in enumerate(node)]
+        raise TypeError(type(node))
+
+    return build(tree)
+
+
+def abstract(tree, dtype=jnp.float32):
+    """ShapeDtypeStruct tree for dry-run lowering (no allocation)."""
+    return _map_specs(lambda ps: jax.ShapeDtypeStruct(ps.shape, dtype), tree)
+
+
+def logical_axes(tree):
+    """Same-structure tree of logical-axes tuples."""
+    return _map_specs(lambda ps: ps.axes, tree)
+
+
+def count_params(tree) -> int:
+    n = 0
+    for _, ps in _tree_paths(tree):
+        k = 1
+        for s in ps.shape:
+            k *= s
+        n += k
+    return n
+
+
+def stack_specs(tree, n: int, axis_name: str = "layers"):
+    """Prepend a stacking dim (for scan-over-layers parameter layout)."""
+    return _map_specs(
+        lambda ps: ParamSpec((n,) + ps.shape, (axis_name,) + ps.axes,
+                             ps.init, ps.scale, ps.fan_in), tree)
+
+
+# ---------------------------------------------------------------------------
+# Normalisation / activations / rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, weight, *, eps=1e-6, offset=0.0):
+    """RMSNorm.  ``offset=1.0`` gives the gemma convention (weight ~ 0)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (offset + weight.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, weight, bias, *, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * weight + bias).astype(dt)
+
+
+def group_norm(x, weight, bias, groups, *, eps=1e-5):
+    """Per-head group norm used by RWKV time-mix output ([B,T,H*D])."""
+    dt = x.dtype
+    B, T, HD = x.shape
+    x = x.astype(jnp.float32).reshape(B, T, groups, HD // groups)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = ((x - mu) * jax.lax.rsqrt(var + eps)).reshape(B, T, HD)
+    return (x * weight + bias).astype(dt)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+ACTIVATIONS = {"silu": silu, "gelu": gelu, "relu": jax.nn.relu}
+
+
+def rope(x, positions, *, theta: float = 10000.0):
+    """Rotary position embedding.  x: [..., T, H, D]; positions: [..., T]."""
+    D = x.shape[-1]
+    dt = x.dtype
+    half = D // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq  # [..., T, half]
+    ang = ang[..., :, None, :]                                # head axis
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    c, s = jnp.cos(ang), jnp.sin(ang)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+                           axis=-1).astype(dt)
+
+
+def sinusoidal_positions(n: int, d: int, *, max_scale: float = 1e4):
+    """Classic transformer sinusoidal table [n, d] (seamless encoder)."""
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (max_scale ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def softcap(x, cap: float):
+    """gemma2-style tanh soft-capping (no-op when cap == 0)."""
+    if cap and cap > 0:
+        return cap * jnp.tanh(x / cap)
+    return x

@@ -1,0 +1,685 @@
+"""Composable LM stacks: dense / MoE / hybrid(mamba) / RWKV / enc-dec / VLM.
+
+One :class:`ModelConfig` describes any of the ten assigned architectures.
+Layers are grouped into the shortest repeating *pattern* (gemma2 ->
+[local, global], jamba -> its 8-layer period, dense -> [layer]) and the
+stack runs as ``lax.scan`` over pattern repeats with parameters stacked on a
+leading ``layers`` axis — compile time and HLO size stay O(pattern), not
+O(depth).  ``jax.checkpoint`` around the scan body implements the
+activation-remat policy.
+
+Public API: :func:`lm_spec` (ParamSpec tree), :func:`forward` (train/eval
+logits), :func:`init_cache` / :func:`prefill` / :func:`decode_step`
+(serving), :func:`cache_axes` (logical sharding axes for the cache).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+
+from . import common as cm
+from . import moe as moe_mod
+from . import rwkv as rwkv_mod
+from . import ssm as ssm_mod
+from .attention import attention, cache_update
+from .common import ParamSpec, spec, stack_specs
+
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"     # dense | moe | hybrid | ssm | encdec | vlm
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_head: int = 32
+    d_ff: int = 256
+    vocab: int = 512
+
+    # attention flavour
+    use_rope: bool = True
+    rope_theta: float = 10_000.0
+    window: int = 0                 # sliding-window size for local layers
+    local_global_period: int = 0    # >0: layer i local iff i % period != period-1
+    attn_softcap: float = 0.0
+    final_softcap: float = 0.0
+    attn_scale: float | None = None
+    qkv_bias: bool = False
+    parallel_block: bool = False    # command-r: x + attn(h) + ffn(h)
+    sandwich_norm: bool = False     # gemma2 pre+post norms
+
+    # norm / act / embeddings
+    norm: str = "rms"               # rms | layer
+    norm_eps: float = 1e-6
+    norm_offset: float = 0.0        # 1.0 => gemma (1+w) convention
+    act: str = "silu"
+    tie_embeddings: bool = True
+    embed_scale: float | None = None     # gemma: sqrt(d_model)
+    logit_scale: float = 1.0
+    embed_multiplier: float = 1.0        # granite
+    residual_multiplier: float = 1.0     # granite
+    pos_embed: str = "rope"              # rope | sinusoidal | none
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_period: int = 1
+    moe_offset: int = 0
+    capacity_factor: float = 1.25
+
+    # hybrid (jamba): attention every `attn_period` layers at `attn_offset`
+    attn_period: int = 0
+    attn_offset: int = 4
+    mamba_d_state: int = 16
+    mamba_d_conv: int = 4
+    mamba_expand: int = 2
+
+    # rwkv
+    rwkv_head_size: int = 64
+    wkv_impl: str = "matmul"        # matmul (GLA-chunked) | scan
+
+    # enc-dec
+    enc_layers: int = 0
+
+    # runtime knobs
+    compute_dtype: Any = "bfloat16"
+    attn_impl: str = "chunked"      # chunked | naive | pallas
+    scan_chunk: int = 256
+    q_chunk: int = 512
+    k_chunk: int = 1024
+    remat: bool = True
+    remat_policy: str = "nothing"   # nothing | dots | offloadable
+
+    @property
+    def d_inner(self) -> int:
+        return self.mamba_expand * self.d_model
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.family == "encdec"
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    kind: str                  # attn | mamba | rwkv
+    moe: bool = False
+    window: int = 0
+    causal: bool = True
+    cross: bool = False
+
+
+def layer_kinds(cfg: ModelConfig, *, role: str = "decoder",
+                n_layers: int | None = None) -> list[LayerSpec]:
+    n = n_layers if n_layers is not None else cfg.n_layers
+    out = []
+    for i in range(n):
+        if cfg.family == "ssm":
+            kind = "rwkv"
+        elif cfg.attn_period > 0:
+            kind = ("attn" if i % cfg.attn_period == cfg.attn_offset
+                    else "mamba")
+        else:
+            kind = "attn"
+        moe = (cfg.n_experts > 0
+               and i % cfg.moe_period == cfg.moe_offset
+               and kind != "rwkv")
+        if cfg.local_global_period > 0:
+            window = (cfg.window
+                      if i % cfg.local_global_period
+                      != cfg.local_global_period - 1 else 0)
+        else:
+            window = cfg.window
+        out.append(LayerSpec(
+            kind=kind, moe=moe, window=window,
+            causal=(role != "encoder"), cross=(role == "xdecoder")))
+    return out
+
+
+def find_pattern(kinds: list[LayerSpec]) -> tuple[list[LayerSpec], int]:
+    """Shortest repeating prefix covering the whole layer list."""
+    n = len(kinds)
+    for p in range(1, n + 1):
+        if n % p == 0 and all(kinds[i] == kinds[i % p] for i in range(n)):
+            return kinds[:p], n // p
+    return kinds, 1
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+def _norm_spec(cfg: ModelConfig, d: int) -> dict:
+    if cfg.norm == "layer":
+        return {"w": spec((d,), ("embed",), init="ones"),
+                "b": spec((d,), ("embed",), init="zeros")}
+    init = "zeros" if cfg.norm_offset else "ones"
+    return {"w": spec((d,), ("embed",), init=init)}
+
+
+def _apply_norm(cfg: ModelConfig, p: dict, x):
+    if cfg.norm == "layer":
+        return cm.layer_norm(x, p["w"], p["b"], eps=cfg.norm_eps)
+    return cm.rms_norm(x, p["w"], eps=cfg.norm_eps, offset=cfg.norm_offset)
+
+
+def _attn_spec(cfg: ModelConfig) -> dict:
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    s = {
+        "wq": spec((d, hq, dh), ("embed", "q_heads", "head")),
+        "wk": spec((d, hkv, dh), ("embed", "kv_heads", "head")),
+        "wv": spec((d, hkv, dh), ("embed", "kv_heads", "head")),
+        "wo": spec((hq, dh, d), ("q_heads", "head", "embed"),
+                   fan_in=hq * dh),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = spec((hq, dh), ("q_heads", "head"), init="zeros")
+        s["bk"] = spec((hkv, dh), ("kv_heads", "head"), init="zeros")
+        s["bv"] = spec((hkv, dh), ("kv_heads", "head"), init="zeros")
+    return s
+
+
+def _ffn_spec(cfg: ModelConfig, ls: LayerSpec) -> dict:
+    if ls.moe:
+        return moe_mod.moe_spec(cfg.d_model, cfg.d_ff, cfg.n_experts)
+    return {
+        "w_gu": spec((cfg.d_model, 2 * cfg.d_ff), ("embed", "mlp")),
+        "w_down": spec((cfg.d_ff, cfg.d_model), ("mlp", "embed")),
+    }
+
+
+def layer_param_spec(cfg: ModelConfig, ls: LayerSpec) -> dict:
+    d = cfg.d_model
+    if ls.kind == "rwkv":
+        return {
+            "ln1": _norm_spec(cfg, d),
+            "time": rwkv_mod.rwkv_time_spec(d, head_size=cfg.rwkv_head_size),
+            "ln2": _norm_spec(cfg, d),
+            "chan": rwkv_mod.rwkv_channel_spec(d, cfg.d_ff),
+        }
+    blk: dict = {"ln": _norm_spec(cfg, d)}
+    if ls.kind == "attn":
+        blk["attn"] = _attn_spec(cfg)
+    else:
+        blk["mamba"] = ssm_mod.mamba_spec(
+            d, d_inner=cfg.d_inner, d_state=cfg.mamba_d_state,
+            d_conv=cfg.mamba_d_conv)
+    if cfg.sandwich_norm:
+        blk["ln_post"] = _norm_spec(cfg, d)
+    if ls.cross:
+        blk["ln_x"] = _norm_spec(cfg, d)
+        blk["xattn"] = _attn_spec(cfg)
+    if not cfg.parallel_block:
+        blk["ffn_ln"] = _norm_spec(cfg, d)
+        if cfg.sandwich_norm:
+            blk["ffn_ln_post"] = _norm_spec(cfg, d)
+    blk["ffn"] = _ffn_spec(cfg, ls)
+    return blk
+
+
+def _stack_specs_for(cfg: ModelConfig, role: str, n_layers: int):
+    kinds = layer_kinds(cfg, role=role, n_layers=n_layers)
+    pattern, repeats = find_pattern(kinds)
+    blocks = [stack_specs(layer_param_spec(cfg, ls), repeats)
+              for ls in pattern]
+    return pattern, repeats, blocks
+
+
+def lm_spec(cfg: ModelConfig) -> dict:
+    tree: dict = {
+        "embed": spec((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                      init="normal", scale=1.0),
+        "final_norm": _norm_spec(cfg, cfg.d_model),
+    }
+    _, _, blocks = _stack_specs_for(cfg, "xdecoder" if cfg.is_encdec
+                                    else "decoder", cfg.n_layers)
+    tree["blocks"] = blocks
+    if not cfg.tie_embeddings:
+        tree["unembed"] = spec((cfg.d_model, cfg.vocab), ("embed", "vocab"))
+    if cfg.is_encdec:
+        _, _, eblocks = _stack_specs_for(cfg, "encoder", cfg.enc_layers)
+        tree["enc_blocks"] = eblocks
+        tree["enc_final_norm"] = _norm_spec(cfg, cfg.d_model)
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+# ---------------------------------------------------------------------------
+
+
+def _attn_core(cfg: ModelConfig, ls: LayerSpec, p: dict, h, positions, *,
+               cache=None, index=None, prefix_len=0, kv_override=None):
+    """h (normed input) -> attention output; returns (out, new_cache)."""
+    B, T, _ = h.shape
+    q = jnp.einsum("btd,dhk->bthk", h, p["wq"].astype(h.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(h.dtype)
+    if kv_override is None:
+        k = jnp.einsum("btd,dhk->bthk", h, p["wk"].astype(h.dtype))
+        v = jnp.einsum("btd,dhk->bthk", h, p["wv"].astype(h.dtype))
+        if "bk" in p:
+            k = k + p["bk"].astype(h.dtype)
+            v = v + p["bv"].astype(h.dtype)
+        if cfg.use_rope and cfg.pos_embed == "rope":
+            q = cm.rope(q, positions, theta=cfg.rope_theta)
+            k = cm.rope(k, positions, theta=cfg.rope_theta)
+    else:
+        k, v = kv_override                     # cross-attention (precomputed)
+        if cfg.use_rope and cfg.pos_embed == "rope":
+            q = cm.rope(q, positions, theta=cfg.rope_theta)
+
+    kv_len = None
+    q_offset = 0
+    new_cache = cache
+    if cache is not None and kv_override is None:
+        ck, cv = cache_update(cache["k"], cache["v"], k, v, index)
+        k, v = ck, cv
+        kv_len = index + T
+        q_offset = index
+        new_cache = {"k": ck, "v": cv}
+    causal = ls.causal and kv_override is None
+    o = attention(
+        q, k, v, causal=causal, window=ls.window, softcap=cfg.attn_softcap,
+        prefix_len=prefix_len, q_offset=q_offset, scale=cfg.attn_scale,
+        kv_len=kv_len, impl=cfg.attn_impl, q_chunk=cfg.q_chunk,
+        k_chunk=cfg.k_chunk)
+    out = jnp.einsum("bthk,hkd->btd", o, p["wo"].astype(h.dtype))
+    return out, new_cache
+
+
+def _ffn_core(cfg: ModelConfig, ls: LayerSpec, p: dict, h):
+    """h (normed) -> (out, aux3) where aux3 = (lb, z, dropped)."""
+    if ls.moe:
+        y, aux = moe_mod.moe_apply(p, h, top_k=cfg.top_k,
+                                   capacity_factor=cfg.capacity_factor,
+                                   act=cfg.act)
+        return y, jnp.stack([aux["moe_load_balance"], aux["moe_z_loss"],
+                             aux["moe_dropped_frac"]])
+    gu = h @ p["w_gu"].astype(h.dtype)
+    g, u = jnp.split(gu, 2, axis=-1)
+    y = (cm.ACTIVATIONS[cfg.act](g.astype(jnp.float32)).astype(h.dtype) * u)
+    return y @ p["w_down"].astype(h.dtype), jnp.zeros((3,), jnp.float32)
+
+
+def apply_layer(cfg: ModelConfig, ls: LayerSpec, p: dict, x, positions, *,
+                cache=None, index=None, prefix_len=0, enc_kv=None):
+    """One transformer/mamba/rwkv block with residuals.
+
+    Returns (x, new_cache, aux3)."""
+    rm = cfg.residual_multiplier
+    aux = jnp.zeros((3,), jnp.float32)
+
+    if ls.kind == "rwkv":
+        st = cache
+        h = _apply_norm(cfg, p["ln1"], x)
+        y, tm_new = rwkv_mod.rwkv_time_mix(
+            p["time"], h, head_size=cfg.rwkv_head_size, chunk=cfg.scan_chunk,
+            impl=cfg.wkv_impl,
+            state=None if st is None else (st["tm_shift"], st["tm_state"]))
+        x = x + rm * y
+        h = _apply_norm(cfg, p["ln2"], x)
+        y, cm_shift = rwkv_mod.rwkv_channel_mix(
+            p["chan"], h, state=None if st is None else st["cm_shift"])
+        x = x + rm * y
+        new_cache = None if st is None else {
+            "tm_shift": tm_new[0], "tm_state": tm_new[1],
+            "cm_shift": cm_shift}
+        return x, new_cache, aux
+
+    new_cache = dict(cache) if isinstance(cache, dict) else None
+    h = _apply_norm(cfg, p["ln"], x)
+
+    if ls.kind == "attn":
+        sub = None if cache is None else cache.get("attn")
+        o, sub_new = _attn_core(cfg, ls, p["attn"], h, positions, cache=sub,
+                                index=index, prefix_len=prefix_len)
+        if new_cache is not None and sub_new is not None:
+            new_cache["attn"] = sub_new
+    else:  # mamba
+        sub = None if cache is None else (cache["conv"], cache["ssm"])
+        o, sub_new = ssm_mod.mamba_apply(
+            p["mamba"], h, d_state=cfg.mamba_d_state, chunk=cfg.scan_chunk,
+            impl=cfg.attn_impl, state=sub)
+        if new_cache is not None:
+            new_cache["conv"], new_cache["ssm"] = sub_new
+
+    if cfg.parallel_block:
+        f, aux = _ffn_core(cfg, ls, p["ffn"], h)
+        return x + rm * (o + f), new_cache, aux
+
+    if cfg.sandwich_norm:
+        o = _apply_norm(cfg, p["ln_post"], o)
+    x = x + rm * o
+
+    if ls.cross:
+        h = _apply_norm(cfg, p["ln_x"], x)
+        o, _ = _attn_core(cfg, ls, p["xattn"], h, positions, cache=None,
+                          index=None, kv_override=enc_kv)
+        x = x + rm * o
+
+    h = _apply_norm(cfg, p["ffn_ln"], x)
+    f, aux = _ffn_core(cfg, ls, p["ffn"], h)
+    if cfg.sandwich_norm:
+        f = _apply_norm(cfg, p["ffn_ln_post"], f)
+    return x + rm * f, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Stacks
+# ---------------------------------------------------------------------------
+
+
+def _cross_kv(cfg: ModelConfig, p_attn: dict, enc_out):
+    k = jnp.einsum("btd,dhk->bthk", enc_out, p_attn["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("btd,dhk->bthk", enc_out, p_attn["wv"].astype(enc_out.dtype))
+    if "bk" in p_attn:
+        k = k + p_attn["bk"].astype(enc_out.dtype)
+        v = v + p_attn["bv"].astype(enc_out.dtype)
+    return k, v
+
+
+def apply_stack(cfg: ModelConfig, blocks, x, positions, *, role="decoder",
+                n_layers=None, caches=None, index=None, prefix_len=0,
+                enc_out=None, enc_kv_cached=None):
+    """Scan the stack; returns (x, new_caches, aux3)."""
+    n = n_layers if n_layers is not None else cfg.n_layers
+    kinds = layer_kinds(cfg, role=role, n_layers=n)
+    pattern, repeats = find_pattern(kinds)
+    have_cache = caches is not None
+    if not have_cache:
+        caches = tuple(jnp.zeros((repeats,)) for _ in pattern)
+
+    def body(carry, xs):
+        xc, auxc = carry
+        pp, cc = xs
+        new_cc = []
+        for j, ls in enumerate(pattern):
+            cache_j = cc[j] if have_cache else None
+            enc_kv = None
+            if ls.cross:
+                if enc_kv_cached is not None:
+                    enc_kv = (cache_j["xk"], cache_j["xv"])
+                elif enc_out is not None:
+                    enc_kv = _cross_kv(cfg, pp[j]["xattn"], enc_out)
+            xc, nc, aux = apply_layer(
+                cfg, ls, pp[j], xc, positions, cache=cache_j, index=index,
+                prefix_len=prefix_len, enc_kv=enc_kv)
+            # pin the residual stream to its logical sharding — without
+            # this XLA may reshard activations between FSDP-sharded layers
+            # (observed as O(activation) collective-permute storms)
+            xc = constrain(xc, ("batch", "seq", None))
+            new_cc.append(nc if nc is not None else 0)
+            auxc = auxc + aux
+        return (xc, auxc), tuple(new_cc)
+
+    if cfg.remat:
+        policies = {
+            "nothing": jax.checkpoint_policies.nothing_saveable,
+            "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        }
+        body = jax.checkpoint(body, policy=policies[cfg.remat_policy])
+
+    xs = (tuple(blocks), tuple(caches))
+    (x, aux), new_caches = jax.lax.scan(body, (x, jnp.zeros((3,), jnp.float32)),
+                                        xs)
+    return x, (list(new_caches) if have_cache else None), aux
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits
+# ---------------------------------------------------------------------------
+
+
+def _sinusoid(positions, d):
+    half = d // 2
+    dim = jnp.arange(half, dtype=jnp.float32)
+    ang = positions[..., None].astype(jnp.float32) / (1e4 ** (dim / half))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def embed_tokens(cfg: ModelConfig, params, tokens, positions):
+    x = params["embed"].astype(cfg.cdtype)[tokens]
+    scale = cfg.embed_scale if cfg.embed_scale else 1.0
+    x = x * jnp.asarray(scale * cfg.embed_multiplier, cfg.cdtype)
+    if cfg.pos_embed == "sinusoidal":
+        x = x + _sinusoid(positions, cfg.d_model).astype(cfg.cdtype)
+    return constrain(x, ("batch", "seq", None))
+
+
+def unembed(cfg: ModelConfig, params, h):
+    """Normed hidden states -> f32 logits (softcapped / scaled)."""
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...td,vd->...tv", h,
+                            params["embed"].astype(h.dtype))
+    else:
+        logits = jnp.einsum("...td,dv->...tv", h,
+                            params["unembed"].astype(h.dtype))
+    logits = logits.astype(jnp.float32) * cfg.logit_scale
+    return cm.softcap(logits, cfg.final_softcap)
+
+
+def logits_from(cfg: ModelConfig, params, x):
+    return unembed(cfg, params, _apply_norm(cfg, params["final_norm"], x))
+
+
+# ---------------------------------------------------------------------------
+# Top-level entry points
+# ---------------------------------------------------------------------------
+
+
+def encode(cfg: ModelConfig, params, frames):
+    """Encoder stack over pre-embedded frames [B, S, d] (seamless stub)."""
+    B, S, _ = frames.shape
+    positions = jnp.arange(S)[None, :]
+    x = frames.astype(cfg.cdtype)
+    if cfg.pos_embed == "sinusoidal":
+        x = x + _sinusoid(positions, cfg.d_model).astype(cfg.cdtype)
+    x, _, _ = apply_stack(cfg, params["enc_blocks"], x, positions,
+                          role="encoder", n_layers=cfg.enc_layers)
+    return _apply_norm(cfg, params["enc_final_norm"], x)
+
+
+def forward(cfg: ModelConfig, params, batch):
+    """Full-sequence logits.
+
+    batch keys: ``tokens`` [B,T]; optional ``patches`` [B,P,d] (vlm prefix)
+    or ``frames`` [B,S,d] (enc-dec source).  Returns (logits, aux3).
+    """
+    h, aux = forward_hidden(cfg, params, batch)
+    return unembed(cfg, params, h), aux
+
+
+def forward_hidden(cfg: ModelConfig, params, batch):
+    """Like :func:`forward` but stops at the final-normed hidden states —
+    the training loss unembeds in sequence chunks to bound peak memory
+    (full ``[B, T, vocab]`` logits never materialise)."""
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    prefix_len = 0
+    enc_out = None
+    role = "decoder"
+    if cfg.family == "vlm" and "patches" in batch:
+        P = batch["patches"].shape[1]
+        positions = jnp.arange(P + T)[None, :]
+        tok_x = embed_tokens(cfg, params, tokens, positions[:, P:])
+        x = jnp.concatenate(
+            [batch["patches"].astype(cfg.cdtype), tok_x], axis=1)
+        prefix_len = P
+    else:
+        positions = jnp.arange(T)[None, :]
+        x = embed_tokens(cfg, params, tokens, positions)
+    if cfg.is_encdec:
+        enc_out = encode(cfg, params, batch["frames"])
+        role = "xdecoder"
+    x, _, aux = apply_stack(cfg, params["blocks"], x, positions, role=role,
+                            prefix_len=prefix_len, enc_out=enc_out)
+    return _apply_norm(cfg, params["final_norm"], x), aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def _layer_cache_spec(cfg: ModelConfig, ls: LayerSpec, batch: int,
+                      max_len: int, enc_len: int):
+    dt = cfg.cdtype
+    if ls.kind == "rwkv":
+        d = cfg.d_model
+        H = d // cfg.rwkv_head_size
+        hs = cfg.rwkv_head_size
+        return {
+            "tm_shift": jax.ShapeDtypeStruct((batch, 1, d), dt),
+            "tm_state": jax.ShapeDtypeStruct((batch, H * hs * hs),
+                                             jnp.float32),
+            "cm_shift": jax.ShapeDtypeStruct((batch, 1, d), dt),
+        }
+    if ls.kind == "mamba":
+        return {
+            "conv": jax.ShapeDtypeStruct(
+                (batch, cfg.mamba_d_conv - 1, cfg.d_inner), dt),
+            "ssm": jax.ShapeDtypeStruct(
+                (batch, cfg.d_inner * cfg.mamba_d_state), jnp.float32),
+        }
+    c = {"attn": {
+        "k": jax.ShapeDtypeStruct((batch, max_len, cfg.n_kv_heads,
+                                   cfg.d_head), dt),
+        "v": jax.ShapeDtypeStruct((batch, max_len, cfg.n_kv_heads,
+                                   cfg.d_head), dt),
+    }}
+    if ls.cross:
+        c["xk"] = jax.ShapeDtypeStruct((batch, enc_len, cfg.n_kv_heads,
+                                        cfg.d_head), dt)
+        c["xv"] = jax.ShapeDtypeStruct((batch, enc_len, cfg.n_kv_heads,
+                                        cfg.d_head), dt)
+    return c
+
+
+_CACHE_AXES = {
+    "k": ("batch", "cache_seq", "kv_heads", "head"),
+    "v": ("batch", "cache_seq", "kv_heads", "head"),
+    "xk": ("batch", "cache_seq", "kv_heads", "head"),
+    "xv": ("batch", "cache_seq", "kv_heads", "head"),
+    "conv": ("batch", None, "mlp"),
+    "ssm": ("batch", "mlp"),
+    "tm_shift": ("batch", None, "embed"),
+    "tm_state": ("batch", "heads_flat"),
+    "cm_shift": ("batch", None, "embed"),
+    "index": (),
+}
+
+
+def cache_struct(cfg: ModelConfig, batch: int, max_len: int, *,
+                 enc_len: int = 0):
+    """ShapeDtypeStruct tree of the decode cache (dry-run friendly)."""
+    role = "xdecoder" if cfg.is_encdec else "decoder"
+    kinds = layer_kinds(cfg, role=role)
+    pattern, repeats = find_pattern(kinds)
+
+    def stack(tree):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((repeats,) + s.shape, s.dtype),
+            tree)
+
+    layers = [stack(_layer_cache_spec(cfg, ls, batch, max_len, enc_len))
+              for ls in pattern]
+    return {"layers": layers,
+            "index": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def cache_axes(cfg: ModelConfig, batch: int, max_len: int, *,
+               enc_len: int = 0):
+    """Logical sharding axes matching :func:`cache_struct` (layer-stacked)."""
+    struct = cache_struct(cfg, batch, max_len, enc_len=enc_len)
+
+    def walk(node, name=None):
+        if isinstance(node, dict):
+            return {k: walk(v, k) for k, v in node.items()}
+        if isinstance(node, list):
+            return [walk(v, name) for v in node]
+        ax = _CACHE_AXES[name]
+        if name != "index":
+            ax = ("layers",) + ax
+        return ax
+
+    return walk(struct)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+               enc_len: int = 0):
+    struct = cache_struct(cfg, batch, max_len, enc_len=enc_len)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), struct)
+
+
+def _run_with_cache(cfg: ModelConfig, params, tokens, cache, *,
+                    prefix_embeds=None):
+    B, T = tokens.shape
+    index = cache["index"]
+    positions = index + jnp.arange(T)[None, :]
+    x = embed_tokens(cfg, params, tokens, positions)
+    prefix_len = 0
+    if prefix_embeds is not None:
+        P = prefix_embeds.shape[1]
+        px = jnp.arange(P)[None, :]
+        x = jnp.concatenate([prefix_embeds.astype(cfg.cdtype), x], axis=1)
+        positions = jnp.concatenate([px, positions + P], axis=1)
+        prefix_len = P
+    role = "xdecoder" if cfg.is_encdec else "decoder"
+    x, new_layers, _ = apply_stack(
+        cfg, params["blocks"], x, positions, role=role,
+        caches=cache["layers"], index=index, prefix_len=prefix_len,
+        enc_kv_cached=cfg.is_encdec or None)
+    logits = logits_from(cfg, params, x)
+    new_cache = {"layers": new_layers, "index": index + x.shape[1]}
+    return logits, new_cache
+
+
+def prefill(cfg: ModelConfig, params, batch, cache):
+    """Run the prompt through the model, filling the cache.
+
+    For enc-dec configs, encodes ``batch['frames']`` and stores the per-layer
+    cross K/V into the cache first.  Returns (last-position logits, cache).
+    """
+    if cfg.is_encdec:
+        enc_out = encode(cfg, params, batch["frames"])
+        kinds = layer_kinds(cfg, role="xdecoder")
+        pattern, repeats = find_pattern(kinds)
+        layers = []
+        for j, ls in enumerate(pattern):
+            cj = dict(cache["layers"][j])
+            if ls.cross:
+                # vmap the projection over the stacked layer axis
+                k, v = jax.vmap(
+                    lambda pa: _cross_kv(cfg, pa, enc_out),
+                    in_axes=0, out_axes=0)(params["blocks"][j]["xattn"])
+                cj["xk"], cj["xv"] = (k.astype(cj["xk"].dtype),
+                                      v.astype(cj["xv"].dtype))
+            layers.append(cj)
+        cache = {"layers": layers, "index": cache["index"]}
+    prefix = batch.get("patches") if cfg.family == "vlm" else None
+    logits, cache = _run_with_cache(cfg, params, batch["tokens"], cache,
+                                    prefix_embeds=prefix)
+    return logits[:, -1], cache
+
+
+def decode_step(cfg: ModelConfig, params, tokens, cache):
+    """One-token decode: tokens [B, 1] against the filled cache."""
+    logits, cache = _run_with_cache(cfg, params, tokens, cache)
+    return logits[:, -1], cache

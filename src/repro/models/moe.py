@@ -1,0 +1,104 @@
+"""Mixture-of-experts FFN with capacity-based token dispatch (GShard-style).
+
+Routing: softmax router -> top-k experts per token (renormalised weights).
+Dispatch: each (token, k) slot gets a *position* inside its expert's
+capacity buffer ``C = ceil(tokens * k / E) * capacity_factor`` via a one-hot
+cumsum; overflowing tokens are dropped from that expert (and their combine
+weight with it).  Expert compute is a batched gated-MLP einsum over the
+``(E, C, d)`` buffer, so sharding the ``experts`` axis over the ``model``
+mesh axis gives expert parallelism — the scatter/gather around it lowers to
+the EP all-to-all.
+
+FLOP note (roofline): dense-everything formulations compute every expert on
+every token (E/k x the useful FLOPs).  Capacity dispatch keeps compiled
+FLOPs ~= capacity_factor x the active-parameter FLOPs, which is what the
+MODEL_FLOPS/HLO_FLOPs ratio in EXPERIMENTS.md checks.
+
+Returns an auxiliary load-balancing loss (Switch-style) plus a router
+z-loss; both are summed into the training objective.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+
+from .common import ACTIVATIONS, spec
+
+
+def moe_spec(d_model: int, d_ff: int, n_experts: int) -> dict:
+    return {
+        "router": spec((d_model, n_experts), ("embed", "experts"),
+                       init="normal", scale=0.02),
+        "w_gu": spec((n_experts, d_model, 2 * d_ff),
+                     ("experts", "embed", "mlp")),
+        "w_down": spec((n_experts, d_ff, d_model),
+                       ("experts", "mlp", "embed")),
+    }
+
+
+def moe_apply(p, x, *, top_k: int, capacity_factor: float = 1.25,
+              act: str = "silu"):
+    """x: [B, T, d] -> (y [B, T, d], aux_losses dict)."""
+    B, T, d = x.shape
+    E = p["router"].shape[1]
+    N = B * T
+    k = top_k
+    C = max(int(-(-N * k // E) * capacity_factor), 1)
+    act_fn = ACTIVATIONS[act]
+
+    xf = x.reshape(N, d)
+    logits = (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                  # (N, E)
+    gate, sel = jax.lax.top_k(probs, k)                      # (N, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # ---- position-in-expert via one-hot cumsum (priority: token order, then
+    # k rank — standard GShard tie-break) --------------------------------
+    sel_flat = sel.reshape(-1)                               # (N*k,)
+    onehot = jax.nn.one_hot(sel.swapaxes(0, 1).reshape(-1), E,
+                            dtype=jnp.int32)                 # (k*N, E) k-major
+    pos_kmajor = jnp.cumsum(onehot, axis=0) - onehot         # rank before me
+    pos_kmajor = jnp.sum(pos_kmajor * onehot, axis=-1)       # (k*N,)
+    pos = pos_kmajor.reshape(k, N).swapaxes(0, 1).reshape(-1)  # (N*k,)
+    keep = pos < C
+    pos = jnp.where(keep, pos, 0)
+
+    # ---- dispatch: (E, C, d) expert buffers (EP: experts -> model axis) --
+    tok = jnp.repeat(jnp.arange(N), k)
+    buf = jnp.zeros((E, C, d), x.dtype)
+    buf = buf.at[sel_flat, pos].add(
+        jnp.where(keep[:, None], xf[tok], 0), mode="drop")
+    # NOTE(§Perf iter 6-8): constraining buf/gu/out to (experts[, cap])
+    # sharding was tried and refuted — pinning experts->model replicated
+    # the expert compute across DP shards (7x dot FLOPs), and adding
+    # cap->data exploded the dispatch all-to-alls (16->81 s collective).
+    # XLA's own propagation places the expert einsums best here; only the
+    # dtypes are constrained (bf16 end-to-end, f32 inside the activation).
+
+    # ---- expert gated MLP (compute dtype end-to-end; f32 only inside the
+    # activation) ----------------------------------------------------------
+    gu = jnp.einsum("ecd,edf->ecf", buf, p["w_gu"].astype(x.dtype))
+    g, u = jnp.split(gu, 2, axis=-1)
+    h = act_fn(g.astype(jnp.float32)).astype(x.dtype) * u
+    out = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(x.dtype))
+
+    # ---- combine (compute dtype; <= k addends per token) ------------------
+    gathered = out[sel_flat, pos]                            # (N*k, d)
+    w_flat = (gate.reshape(-1) * keep).astype(x.dtype)
+    y = jnp.zeros((N, d), x.dtype)
+    y = y.at[tok].add(gathered * w_flat[:, None])
+    y = y.reshape(B, T, d)
+
+    # ---- aux losses ------------------------------------------------------
+    me = jnp.mean(probs, axis=0)                             # importance
+    ce = jnp.mean(
+        jax.nn.one_hot(sel[:, 0], E, dtype=jnp.float32), axis=0)  # load
+    aux = {
+        "moe_load_balance": E * jnp.sum(me * ce),
+        "moe_z_loss": jnp.mean(jnp.square(
+            jax.scipy.special.logsumexp(logits, axis=-1))),
+        "moe_dropped_frac": 1.0 - jnp.mean(keep.astype(jnp.float32)),
+    }
+    return y, aux

@@ -1,0 +1,242 @@
+"""RWKV6 ("Finch", arXiv:2404.05892) — attention-free token mixer with
+data-dependent decay.
+
+Per head ``h`` with key/value dims ``K=V=head_size``:
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          (state: [K, V])
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+``w_t`` is data-dependent (the Finch novelty) via a low-rank MLP on the
+token-shifted input; the five projections (r,k,v,w,g) each get their own
+data-dependent token-shift mix (``time_maa``).  The recurrence is diagonal
+in ``(h, k)`` broadcast over ``v``, so it runs on the same chunked
+:func:`repro.models.ssm._scan_chunks` /
+:func:`repro.kernels.ops.linear_scan` machinery as mamba.
+
+Channel mixing is the squared-relu MLP with sigmoid receptance gate.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+from .common import silu, spec
+
+MAA_RANK = 32
+DECAY_RANK = 64
+
+
+def _wkv_chunks(r, k, v, w, u, s0, *, chunk: int):
+    """Chunked WKV recurrence with in-body outer products.
+
+    Materialising decay/kv at ``(B,T,H,K,V)`` (the naive linear-scan
+    lowering) cost ~64x the input traffic; here each step builds
+    ``k_t (x) v_t`` inside the scan body so only ``(B,T,H,K|V)``
+    projections and the carried state ever exist (§Perf iter 12).
+
+    r, k, w: [B,T,H,K] f32; v: [B,T,H,V] f32; u: [H,K] f32;
+    s0: [B,H,K,V] f32.  Returns (y [B,T,H,V] f32, s_last).
+    """
+    B, T, H, K = k.shape
+    V = v.shape[-1]
+    c = min(chunk, T)
+    Tp = -(-T // c) * c
+
+    def prep(t, fill=0.0):
+        t = jnp.pad(t, ((0, 0), (0, Tp - T), (0, 0), (0, 0)),
+                    constant_values=fill)
+        # (nc, c, B, H, *) — time-major inside each chunk
+        return t.reshape(B, Tp // c, c, H, t.shape[-1]).transpose(1, 2, 0, 3, 4)
+
+    rs, ks, vs, ws = prep(r), prep(k), prep(v), prep(w, fill=1.0)
+
+    @jax.checkpoint
+    def chunk_body(S, inp):
+        rc, kc, vc, wc = inp
+
+        def step(S, t_in):
+            r_t, k_t, v_t, w_t = t_in          # (B,H,K) / (B,H,V)
+            y_t = jnp.einsum("bhk,bhkv->bhv", r_t, S)
+            y_t = y_t + jnp.einsum("bhk,hk,bhk->bh", r_t, u,
+                                   k_t)[..., None] * v_t
+            S = w_t[..., None] * S + k_t[..., None] * v_t[..., None, :]
+            return S, y_t
+
+        return jax.lax.scan(step, S, (rc, kc, vc, wc))
+
+    s_last, ys = jax.lax.scan(chunk_body, s0, (rs, ks, vs, ws))
+    y = ys.reshape(Tp // c, c, B, H, V).transpose(2, 0, 1, 3, 4)
+    return y.reshape(B, Tp, H, V)[:, :T], s_last
+
+
+WKV_WINDOW = 8          # intra-window exponents bounded by WINDOW*CLAMP
+WKV_LOG_CLAMP = 8.0     # per-token |log w| clamp (w >= e^-8, GLA-style)
+
+
+def _wkv_chunks_matmul(r, k, v, w, u, s0, *, window: int = WKV_WINDOW):
+    """GLA-style chunked-matmul WKV (§Perf iter 13 — the TPU-native form).
+
+    Within a window of ``window`` tokens the decay products factor as
+    ``exp(P_t - P_s) = exp(P_t - P_0) * exp(P_0 - P_s)`` with
+    ``P_t = sum_{r<=t} log w_r`` (cumulative log-decay relative to the
+    window start).  Both factors stay inside f32 range because
+    ``|P| <= window * WKV_LOG_CLAMP = 64``, so the s<t interaction becomes
+    one masked ``(window x window)`` matmul per head — MXU work instead of
+    a sequential scan, and the carried state is touched once per *window*
+    rather than once per token.
+
+    Semantics match :func:`_wkv_chunks` exactly up to the decay clamp
+    ``w >= exp(-WKV_LOG_CLAMP)`` (asserted in tests).
+    """
+    B, T, H, K = k.shape
+    V = v.shape[-1]
+    c = window
+    Tp = -(-T // c) * c
+    nw = Tp // c
+
+    def prep(t, fill=0.0):
+        t = jnp.pad(t, ((0, 0), (0, Tp - T), (0, 0), (0, 0)),
+                    constant_values=fill)
+        return t.reshape(B, nw, c, H, t.shape[-1]).swapaxes(0, 1)
+
+    rs, ks, vs, ws = prep(r), prep(k), prep(v), prep(w, fill=1.0)
+
+    mask = jnp.tril(jnp.ones((c, c), jnp.float32), k=-1)   # strict lower
+
+    @jax.checkpoint
+    def window_body(S, inp):
+        rc, kc, vc, wc = inp                    # (B,c,H,K) / (B,c,H,V)
+        logw = jnp.clip(jnp.log(jnp.maximum(wc, 1e-38)),
+                        -WKV_LOG_CLAMP, 0.0)
+        P = jnp.cumsum(logw, axis=1)            # (B,c,H,K), P_t incl. w_t
+        r_in = rc * jnp.exp(P - logw)           # r_t e^{P_{t-1}}  (<= 1)
+        k_out = kc * jnp.exp(-P)                # k_s e^{-P_s}     (<= e^64)
+        A = jnp.einsum("bthk,bshk->bhts", r_in, k_out)
+        # NOTE: A[t,s] valid only for s < t (mask); bounded because the
+        # product r_in * k_out carries exp(P_{t-1} - P_s) <= 1 after mask.
+        A = A * mask[None, None]
+        bonus = jnp.einsum("bthk,hk,bthk->bth", rc, u, kc)
+        y = jnp.einsum("bhts,bshv->bthv", A, vc)
+        y = y + bonus[..., None] * vc
+        y = y + jnp.einsum("bthk,bhkv->bthv", r_in, S)
+        decay_all = jnp.exp(P[:, -1])           # e^{P_c}
+        k_tail = kc * jnp.exp(P[:, -1:] - P)    # e^{P_c - P_s} (<= 1)
+        S = decay_all[..., None] * S + jnp.einsum("bshk,bshv->bhkv",
+                                                  k_tail, vc)
+        return S, y
+
+    s_last, ys = jax.lax.scan(window_body, s0, (rs, ks, vs, ws))
+    y = ys.swapaxes(0, 1).reshape(B, Tp, H, V)[:, :T]
+    return y, s_last
+
+
+def rwkv_time_spec(d: int, *, head_size: int = 64) -> dict:
+    H = d // head_size
+    return {
+        "maa_x": spec((d,), ("embed",), init="zeros"),
+        "maa_rkvwg": spec((5, d), (None, "embed"), init="zeros"),
+        "maa_w1": spec((d, 5 * MAA_RANK), ("embed", None), init="normal",
+                       scale=1e-4),
+        "maa_w2": spec((5, MAA_RANK, d), (None, None, "embed"), init="normal",
+                       scale=0.02),
+        "decay_base": spec((d,), ("embed",), init="const", scale=-4.0),
+        "decay_w1": spec((d, DECAY_RANK), ("embed", None), init="normal",
+                         scale=1e-4),
+        "decay_w2": spec((DECAY_RANK, d), (None, "embed"), init="normal",
+                         scale=0.02),
+        "bonus": spec((H, head_size), ("q_heads", "head"), init="normal",
+                      scale=0.5),
+        "w_r": spec((d, d), ("embed", "heads_flat")),
+        "w_k": spec((d, d), ("embed", "heads_flat")),
+        "w_v": spec((d, d), ("embed", "heads_flat")),
+        "w_g": spec((d, d), ("embed", "heads_flat")),
+        "w_o": spec((d, d), ("heads_flat", "embed")),
+        "ln_w": spec((d,), ("embed",), init="ones"),
+        "ln_b": spec((d,), ("embed",), init="zeros"),
+    }
+
+
+def rwkv_channel_spec(d: int, d_ff: int) -> dict:
+    return {
+        "maa_k": spec((d,), ("embed",), init="zeros"),
+        "maa_r": spec((d,), ("embed",), init="zeros"),
+        "w_k": spec((d, d_ff), ("embed", "mlp")),
+        "w_v": spec((d_ff, d), ("mlp", "embed")),
+        "w_r": spec((d, d), ("embed", "embed2")),
+    }
+
+
+def _token_shift(x, last):
+    """Shift right by one along T; ``last`` [B,1,d] seeds position 0."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([last, x[:, :-1]], axis=1), x[:, -1:]
+
+
+def rwkv_time_mix(p, x, *, head_size: int = 64, chunk: int = 256,
+                  impl: str = "chunked", state=None):
+    """x: [B,T,d] -> (y, new_state).  state = (shift [B,1,d], S [B,H*K*V])."""
+    B, T, d = x.shape
+    H = d // head_size
+    K = V = head_size
+    shift0 = None if state is None else state[0]
+    xx, shift1 = _token_shift(x, shift0)
+    dx = xx - x
+
+    xf = x.astype(jnp.float32)
+    dxf = dx.astype(jnp.float32)
+    # data-dependent token-shift mixing (time_maa)
+    base = xf + dxf * p["maa_x"]
+    lora = jnp.tanh(base @ p["maa_w1"]).reshape(B, T, 5, MAA_RANK)
+    mixes = p["maa_rkvwg"][None, None] + jnp.einsum(
+        "btfr,frd->btfd", lora, p["maa_w2"])          # (B,T,5,d)
+    xr, xk, xv, xw, xg = [xf + dxf * mixes[:, :, i] for i in range(5)]
+
+    r = (xr @ p["w_r"].astype(jnp.float32)).reshape(B, T, H, K)
+    k = (xk @ p["w_k"].astype(jnp.float32)).reshape(B, T, H, K)
+    v = (xv @ p["w_v"].astype(jnp.float32)).reshape(B, T, H, V)
+    g = silu(xg @ p["w_g"].astype(jnp.float32))
+
+    # data-dependent decay w_t in (0,1)
+    dec = p["decay_base"] + jnp.tanh(xw @ p["decay_w1"]) @ p["decay_w2"]
+    w = jnp.exp(-jnp.exp(dec.astype(jnp.float32))).reshape(B, T, H, K)
+
+    u = p["bonus"].astype(jnp.float32)                 # (H, K)
+    s0 = (jnp.zeros((B, H, K, V), jnp.float32) if state is None
+          else state[1].reshape(B, H, K, V))
+    if impl == "matmul" and T >= WKV_WINDOW:
+        # the matmul path assumes the decay clamp — apply it to the scan
+        # inputs too so both impls agree bit-for-bit on clamped decays
+        y, s_last = _wkv_chunks_matmul(r, k, v, w, u, s0)
+    else:
+        y, s_last = _wkv_chunks(r, k, v, w, u, s0, chunk=chunk)
+    s_last = s_last.reshape(B, -1)
+    y = y.reshape(B, T, d)
+    y = cm.group_norm(y, p["ln_w"], p["ln_b"], H) * g
+    out = (y @ p["w_o"].astype(jnp.float32)).astype(x.dtype)
+    return out, (shift1.astype(x.dtype), s_last)
+
+
+def rwkv_channel_mix(p, x, *, state=None):
+    """Squared-relu channel mix.  state = shift [B,1,d]."""
+    xx, shift1 = _token_shift(x, state)
+    dx = (xx - x).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    xk = xf + dx * p["maa_k"]
+    xr = xf + dx * p["maa_r"]
+    kk = jnp.square(jax.nn.relu(xk @ p["w_k"].astype(jnp.float32)))
+    vv = kk @ p["w_v"].astype(jnp.float32)
+    out = jax.nn.sigmoid(xr @ p["w_r"].astype(jnp.float32)) * vv
+    return out.astype(x.dtype), shift1.astype(x.dtype)
+
+
+def rwkv_init_state(batch: int, d: int, *, head_size: int = 64,
+                    dtype=jnp.float32):
+    H = d // head_size
+    return {
+        "tm_shift": jnp.zeros((batch, 1, d), dtype),
+        "tm_state": jnp.zeros((batch, H * head_size * head_size),
+                              jnp.float32),
+        "cm_shift": jnp.zeros((batch, 1, d), dtype),
+    }

@@ -1,0 +1,166 @@
+"""Training step: chunked cross-entropy, gradient accumulation, AdamW.
+
+Design points for scale:
+
+* **Chunked loss** — the final ``[B, T, vocab]`` logits never materialise;
+  the normed hidden states are unembedded in sequence chunks inside a
+  rematted ``lax.scan`` (peak extra memory = one ``[B, chunk, vocab]``
+  slab, vocab-sharded over ``model``).
+* **Gradient accumulation** — the global batch is split into ``accum``
+  microbatches scanned sequentially; gradients accumulate in f32 at FSDP
+  sharding, so arbitrarily large global batches fit.
+* **Cross-pod gradient compression** — optional int8 error-feedback pass
+  (:mod:`repro.optim.compress`) between accumulation and AdamW.
+* The returned ``train_step(state, batch)`` is a pure jit-able function;
+  ``make_state_specs`` exposes the logical axes of every state leaf so the
+  launcher can build shardings for any mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain as shd_constrain
+from repro.models import common as cm
+from repro.models import lm
+from repro.optim import adamw, compress, schedule as sched_mod
+
+
+def chunked_xent(cfg, params, h, targets, mask, *, chunk: int = 512):
+    """Sum token cross-entropy + token count, unembedding chunk-by-chunk."""
+    B, T, d = h.shape
+    c = min(chunk, T)
+    Tp = -(-T // c) * c
+    h = jnp.pad(h, ((0, 0), (0, Tp - T), (0, 0)))
+    targets = jnp.pad(targets, ((0, 0), (0, Tp - T)))
+    mask = jnp.pad(mask, ((0, 0), (0, Tp - T)))
+    nc = Tp // c
+    hs = h.reshape(B, nc, c, d).transpose(1, 0, 2, 3)
+    ts = targets.reshape(B, nc, c).transpose(1, 0, 2)
+    ms = mask.reshape(B, nc, c).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        hc, tc, mc = inp
+        hc = shd_constrain(hc, ("batch", None, None))
+        logits = lm.unembed(cfg, params, hc)            # (B, c, V) f32
+        logits = shd_constrain(logits, ("batch", None, "vocab"))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        loss = jnp.sum((lse - ll) * mc)
+        return (carry[0] + loss, carry[1] + jnp.sum(mc)), None
+
+    (loss, denom), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), jnp.float32(0.0)), (hs, ts, ms))
+    return loss, denom
+
+
+def loss_fn(cfg, params, batch, *, lb_coef: float = 0.01,
+            z_coef: float = 1e-3, xent_chunk: int = 512):
+    h, aux = lm.forward_hidden(cfg, params, batch)
+    loss, denom = chunked_xent(cfg, params, h, batch["targets"],
+                               batch["loss_mask"], chunk=xent_chunk)
+    ce = loss / jnp.maximum(denom, 1.0)
+    total = ce + lb_coef * aux[0] + z_coef * aux[1]
+    metrics = {"loss": ce, "tokens": denom, "moe_lb": aux[0],
+               "moe_z": aux[1], "moe_dropped": aux[2]}
+    return total, metrics
+
+
+def init_state(cfg, key, *, use_compression: bool = False,
+               param_dtype=jnp.float32) -> dict:
+    params = cm.materialize(lm.lm_spec(cfg), key, dtype=param_dtype)
+    state = {"params": params, "opt": adamw.init(params)}
+    if use_compression:
+        state["err"] = compress.init_error(params)
+    return state
+
+
+def abstract_state(cfg, *, use_compression: bool = False,
+                   param_dtype=jnp.float32) -> dict:
+    """ShapeDtypeStruct state tree (dry-run: no allocation)."""
+    spec_tree = lm.lm_spec(cfg)
+    params = cm.abstract(spec_tree, dtype=param_dtype)
+    f32 = lambda t: jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), t)
+    state = {"params": params,
+             "opt": adamw.AdamWState(jax.ShapeDtypeStruct((), jnp.int32),
+                                     f32(params), f32(params))}
+    if use_compression:
+        state["err"] = f32(params)
+    return state
+
+
+def state_axes(cfg, *, use_compression: bool = False) -> dict:
+    """Logical axes for every train-state leaf (mirrors abstract_state)."""
+    axes = cm.logical_axes(lm.lm_spec(cfg))
+    state = {"params": axes,
+             "opt": adamw.AdamWState((), axes, axes)}
+    if use_compression:
+        state["err"] = axes
+    return state
+
+
+def make_train_step(cfg, *, accum: int = 1, peak_lr: float = 3e-4,
+                    warmup_steps: int = 100, total_steps: int = 10_000,
+                    weight_decay: float = 0.1, max_grad_norm: float = 1.0,
+                    schedule: str = "warmup_cosine",
+                    use_compression: bool = False,
+                    lb_coef: float = 0.01, z_coef: float = 1e-3,
+                    xent_chunk: int = 512) -> Callable:
+    """Build ``train_step(state, batch) -> (state, metrics)``."""
+    sched = functools.partial(sched_mod.SCHEDULES[schedule],
+                              peak_lr=peak_lr, warmup_steps=warmup_steps,
+                              total_steps=total_steps)
+
+    def grads_of(params, mb):
+        return jax.grad(
+            lambda p: loss_fn(cfg, p, mb, lb_coef=lb_coef, z_coef=z_coef,
+                              xent_chunk=xent_chunk),
+            has_aux=True)(params)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if accum == 1:
+            grads, metrics = grads_of(params, batch)
+        else:
+            def split(x):
+                return x.reshape((accum, x.shape[0] // accum) + x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+
+            def body(carry, mb):
+                g_acc, met_acc = carry
+                g, met = grads_of(params, mb)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                     g_acc, g)
+                met_acc = jax.tree.map(lambda a, b: a + b, met_acc, met)
+                return (g_acc, met_acc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            m0 = {"loss": jnp.float32(0), "tokens": jnp.float32(0),
+                  "moe_lb": jnp.float32(0), "moe_z": jnp.float32(0),
+                  "moe_dropped": jnp.float32(0)}
+            (grads, metrics), _ = jax.lax.scan(body, (g0, m0), mbs)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            metrics = jax.tree.map(lambda m: m / accum, metrics)
+
+        new_state = dict(state)
+        if use_compression:
+            grads, new_err = compress.compress_grads(grads, state["err"])
+            new_state["err"] = new_err
+
+        lr = sched(state["opt"].step + 1)
+        new_params, new_opt, opt_metrics = adamw.update(
+            grads, state["opt"], params, lr=lr,
+            weight_decay=weight_decay, max_grad_norm=max_grad_norm)
+        new_state["params"] = new_params
+        new_state["opt"] = new_opt
+        metrics = dict(metrics, lr=lr, **opt_metrics,
+                       step=new_opt.step.astype(jnp.float32))
+        return new_state, metrics
+
+    return train_step

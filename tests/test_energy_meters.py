@@ -1,0 +1,77 @@
+"""Energy-metering framework tests (paper §3.3): direct meters, indirect
+meters (HVAC), aggregators, and the Eq. 6 adjusted-aggregation VM power
+attribution."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.energy import (MeterAccum, PowerStateTable, hvac_meter,
+                               instantaneous_power, spreader_utilisation,
+                               vm_power_attribution)
+
+
+def test_instantaneous_power_linear_and_constant():
+    table = PowerStateTable.simple()
+    # off (constant 36.4), running idle (368.8), running full (722.7)
+    states = jnp.asarray([0, 2, 2], jnp.int32)
+    util = jnp.asarray([0.9, 0.0, 1.0])
+    p = np.asarray(instantaneous_power(table, states, util))
+    np.testing.assert_allclose(p, [36.4, 368.8, 722.7], rtol=1e-6)
+
+
+def test_instantaneous_power_clips_utilisation():
+    table = PowerStateTable.simple()
+    p = instantaneous_power(table, jnp.asarray([2]), jnp.asarray([1.7]))
+    np.testing.assert_allclose(float(p[0]), 722.7, rtol=1e-6)
+
+
+def test_spreader_utilisation_counters():
+    rates = jnp.asarray([2.0, 3.0, 5.0])
+    live = jnp.asarray([True, True, False])
+    provider = jnp.asarray([0, 0, 1], jnp.int32)
+    perf = jnp.asarray([10.0, 10.0])
+    u = np.asarray(spreader_utilisation(rates, live, provider, perf))
+    np.testing.assert_allclose(u, [0.5, 0.0], rtol=1e-6)
+
+
+def test_vm_power_attribution_eq6():
+    """Eq. 6: variable part proportional to the VM's rate share; idle part
+    split across the host's VMs; sums reconstruct the host draw."""
+    pm_idle = jnp.asarray([368.8])
+    pm_span = jnp.asarray([722.7 - 368.8])
+    pm_util = jnp.asarray([0.75])
+    pm_power = pm_idle + pm_span * pm_util
+    # two VMs on host 0: 2/3 and 1/3 of the delivered rate
+    vm_frac = jnp.asarray([2.0 / 3.0, 1.0 / 3.0])
+    vm_host = jnp.asarray([0, 0], jnp.int32)
+    vms_on_host = jnp.asarray([2], jnp.int32)
+    p = np.asarray(vm_power_attribution(pm_power, pm_idle, pm_span, pm_util,
+                                        vm_frac, vm_host, vms_on_host))
+    var = float(pm_span[0] * pm_util[0])
+    np.testing.assert_allclose(p[0], var * 2 / 3 + 368.8 / 2, rtol=1e-6)
+    np.testing.assert_allclose(p[1], var * 1 / 3 + 368.8 / 2, rtol=1e-6)
+    # dependent meters double-count by design (paper §3.3.2): VM sum == PM
+    np.testing.assert_allclose(p.sum(), float(pm_power[0]), rtol=1e-6)
+
+
+def test_vm_power_attribution_unhosted_zero():
+    p = vm_power_attribution(jnp.asarray([500.0]), jnp.asarray([368.8]),
+                             jnp.asarray([353.9]), jnp.asarray([0.5]),
+                             jnp.asarray([1.0]), jnp.asarray([-1]),
+                             jnp.asarray([0]))
+    assert float(p[0]) == 0.0
+
+
+def test_hvac_indirect_meter_pue():
+    m = hvac_meter(pue_minus_one=0.58)
+    # 100 kW IT load -> 58 kW cooling (PUE 1.58)
+    assert abs(float(m.power(jnp.asarray(100e3))) - 58e3) < 1e-3
+
+
+def test_meter_accumulator_kahan():
+    acc = MeterAccum.zero()
+    for _ in range(10000):
+        acc = acc.integrate(jnp.float32(0.1), jnp.float32(0.01))
+    np.testing.assert_allclose(float(acc.energy), 10.0, rtol=1e-5)
+    assert float(acc.last_power) == np.float32(0.1)

@@ -1,0 +1,150 @@
+"""Multi-device integration via subprocesses (the parent pytest process must
+keep the default single CPU device, so device-count forcing happens in
+children only — mirroring the dryrun.py contract)."""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+
+def _run(code: str, devices: int = 8, timeout=560):
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
+    return subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+def test_sharded_train_step_2x4():
+    code = """
+import jax, jax.numpy as jnp, numpy as np
+from repro import configs
+from repro.dist import sharding as shd
+from repro.train import step as step_mod
+from repro.data.pipeline import DataConfig, make_batch
+
+cfg = configs.get_reduced("granite-moe-1b-a400m")
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+state_abs = step_mod.abstract_state(cfg)
+state_ax = step_mod.state_axes(cfg)
+state_sh = shd.tree_shardings(state_ax, state_abs, mesh, shd.TRAIN_RULES)
+state = step_mod.init_state(cfg, jax.random.PRNGKey(0))
+state = jax.device_put(state, state_sh)
+ts = jax.jit(step_mod.make_train_step(cfg, accum=2, peak_lr=1e-2,
+                                      xent_chunk=16),
+             in_shardings=(state_sh, None), out_shardings=(state_sh, None),
+             donate_argnums=(0,))
+dcfg = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8)
+losses = []
+for i in range(4):
+    batch = {k: jnp.asarray(v) for k, v in
+             make_batch(dcfg, i, model_cfg=cfg).items()}
+    state, m = ts(state, batch)
+    losses.append(float(m["loss"]))
+assert all(np.isfinite(losses)), losses
+assert losses[-1] < losses[0], losses
+# params really sharded over the mesh
+leaf = state["params"]["embed"]
+assert len(leaf.sharding.device_set) > 1
+print("SHARDED_OK", losses[0], losses[-1])
+"""
+    r = _run(code)
+    assert "SHARDED_OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_elastic_reshard_restore(tmp_path):
+    """Checkpoint on a 4x2 mesh, restore onto 2x2 (pod-loss shrink)."""
+    save_code = f"""
+import jax
+from repro import configs
+from repro.dist import sharding as shd
+from repro.train import step as step_mod
+from repro.train.ckpt import Checkpointer
+
+cfg = configs.get_reduced("granite-3-2b")
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+state = step_mod.init_state(cfg, jax.random.PRNGKey(7))
+sh = shd.tree_shardings(step_mod.state_axes(cfg),
+                        step_mod.abstract_state(cfg), mesh, shd.TRAIN_RULES)
+state = jax.device_put(state, sh)
+Checkpointer(r"{tmp_path}").save(state, 5)
+print("SAVED_OK")
+"""
+    r = _run(save_code)
+    assert "SAVED_OK" in r.stdout, r.stdout + r.stderr
+
+    restore_code = f"""
+import jax, numpy as np
+from repro import configs
+from repro.dist import sharding as shd
+from repro.train import step as step_mod
+from repro.train.ckpt import Checkpointer
+
+cfg = configs.get_reduced("granite-3-2b")
+mesh = jax.make_mesh((2, 2), ("data", "model"))   # smaller fleet
+abs_state = step_mod.abstract_state(cfg)
+sh = shd.tree_shardings(step_mod.state_axes(cfg), abs_state, mesh,
+                        shd.TRAIN_RULES)
+state, step = Checkpointer(r"{tmp_path}").restore(abs_state, shardings=sh)
+assert step == 5
+ref = step_mod.init_state(cfg, jax.random.PRNGKey(7))
+a = np.asarray(state["params"]["embed"])
+b = np.asarray(ref["params"]["embed"])
+np.testing.assert_array_equal(a, b)
+print("RESHARD_OK")
+"""
+    r = _run(restore_code, devices=4)
+    assert "RESHARD_OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_dryrun_cell_smoke():
+    """One real dry-run cell on a small mesh, end to end, via the CLI."""
+    out = Path("/tmp/dryrun_test_out")
+    out.mkdir(exist_ok=True)
+    env = dict(os.environ, PYTHONPATH=SRC)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "granite-moe-1b-a400m", "--shape", "decode_32k", "--mesh", "4x4",
+         "--out", str(out)],
+        env=env, capture_output=True, text=True, timeout=560)
+    rec = json.loads(
+        (out / "granite-moe-1b-a400m_decode_32k_4x4.json").read_text())
+    assert rec["ok"], rec.get("error", r.stderr[-1000:])
+    assert rec["hlo_cost"]["dot_flops"] > 0
+    assert rec["memory"]["temp_size_in_bytes"] > 0
+
+
+def test_pipeline_parallel():
+    """GPipe over 4 stages == sequential stage application."""
+    code = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.dist.pipeline import gpipe
+
+S, M, mb, d = 4, 8, 2, 16
+mesh = jax.make_mesh((S,), ("stage",))
+key = jax.random.PRNGKey(0)
+Ws = jax.random.normal(key, (S, d, d)) * 0.3
+bs = jax.random.normal(jax.random.fold_in(key, 1), (S, d)) * 0.1
+params = {"w": Ws, "b": bs}
+
+def stage_fn(p, x):
+    return jnp.tanh(x @ p["w"] + p["b"])
+
+xs = jax.random.normal(jax.random.fold_in(key, 2), (M, mb, d))
+piped = gpipe(stage_fn, mesh, "stage", S)
+got = piped(params, xs)
+
+want = xs
+for s in range(S):
+    want = jnp.tanh(want @ Ws[s] + bs[s])
+np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                           rtol=2e-5, atol=2e-5)
+print("PIPELINE_OK")
+"""
+    r = _run(code, devices=4)
+    assert "PIPELINE_OK" in r.stdout, r.stdout + r.stderr[-2000:]

@@ -1,0 +1,108 @@
+"""Sharding-rule unit tests over an AbstractMesh (no devices needed) plus
+hypothesis properties: specs never oversubscribe a mesh axis and always
+divide the dimension they shard."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.dist import sharding as shd
+
+MESH = AbstractMesh((16, 16), ("data", "model"))
+POD_MESH = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_basic_tp_fsdp():
+    spec = shd.pspec_for(("embed", "mlp"), (4096, 16384), MESH,
+                         shd.TRAIN_RULES)
+    assert spec == P("data", "model")
+
+
+def test_batch_takes_pod_and_data():
+    spec = shd.pspec_for(("batch", "seq"), (256, 4096), POD_MESH,
+                         shd.TRAIN_RULES)
+    assert spec == P(("pod", "data"), None)
+
+
+def test_indivisible_axis_dropped():
+    # 8 kv heads cannot split over 16-way model axis -> replicated
+    spec = shd.pspec_for(("embed", "kv_heads", "head"), (4096, 8, 128),
+                         MESH, shd.TRAIN_RULES)
+    assert spec == P("data", None, None)
+
+
+def test_duplicate_mesh_axis_not_reused():
+    # experts take `model`; mlp would also want it -> mlp replicated
+    spec = shd.pspec_for(("experts", "embed", "mlp"), (16, 4096, 12800),
+                         MESH, shd.TRAIN_RULES)
+    assert spec == P("model", "data", None)
+
+
+def test_batch_one_fully_replicated():
+    spec = shd.pspec_for(("batch", None), (1, 1), POD_MESH, shd.SERVE_RULES)
+    assert spec == P(None, None)
+
+
+def test_partial_batch_split():
+    # batch 32 on (pod=2, data=16): both fit (2*16=32 divides 32)
+    spec = shd.pspec_for(("batch", "seq"), (32, 32768), POD_MESH,
+                         shd.SERVE_RULES)
+    assert spec == P(("pod", "data"), None)
+
+
+def test_serve_rules_no_fsdp():
+    spec = shd.pspec_for(("embed", "mlp"), (4096, 16384), MESH,
+                         shd.SERVE_RULES)
+    assert spec == P(None, "model")
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    names=st.lists(st.sampled_from(
+        ["batch", "embed", "mlp", "q_heads", "kv_heads", "vocab",
+         "experts", "seq", "head", None]), min_size=1, max_size=4),
+    dims=st.lists(st.integers(min_value=1, max_value=4096), min_size=4,
+                  max_size=4),
+)
+def test_pspec_properties(names, dims):
+    shape = tuple(dims[:len(names)])
+    spec = shd.pspec_for(tuple(names), shape, POD_MESH, shd.TRAIN_RULES)
+    used = []
+    for dim, part in zip(shape, tuple(spec)):
+        axes = (part,) if isinstance(part, str) else (part or ())
+        prod = 1
+        for ax in axes:
+            assert ax not in used, "mesh axis used twice"
+            used.append(ax)
+            prod *= POD_MESH.shape[ax]
+        assert dim % prod == 0, "sharded dim must divide evenly"
+
+
+def test_tree_shardings_structure():
+    import numpy as np
+    axes = {"a": ("embed", "mlp"), "b": {"c": ("batch",)}}
+    ab = {"a": jax.ShapeDtypeStruct((64, 32), jnp.float32),
+          "b": {"c": jax.ShapeDtypeStruct((8,), jnp.float32)}}
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    sh = shd.tree_shardings(axes, ab, mesh, shd.TRAIN_RULES)
+    assert sh["a"].spec == P(None, None)  # 1-way mesh -> trivial
+    assert sh["b"]["c"].mesh == mesh
+
+
+def test_cache_seq_fallback_priority():
+    """cache_seq only takes mesh axes that batch/kv_heads left free."""
+    # decode batch=128: batch takes (pod,data); kv=8 fails model -> seq: model
+    spec = shd.pspec_for(("batch", "cache_seq", "kv_heads", "head"),
+                         (128, 32768, 8, 128), POD_MESH, shd.SERVE_RULES)
+    assert spec == P(("pod", "data"), "model", None, None)
+    # decode batch=128, kv=16: kv takes model -> seq gets nothing
+    spec = shd.pspec_for(("batch", "cache_seq", "kv_heads", "head"),
+                         (128, 32768, 16, 128), POD_MESH, shd.SERVE_RULES)
+    assert spec == P(("pod", "data"), None, "model", None)
+    # long-context batch=1, kv=8: seq takes model AND data
+    spec = shd.pspec_for(("batch", "cache_seq", "kv_heads", "head"),
+                         (1, 524288, 8, 128), POD_MESH, shd.SERVE_RULES)
+    assert spec == P(None, ("model", "data"), None, None)

@@ -1,0 +1,139 @@
+"""Training-loop integration: loss decreases, checkpoint roundtrip, async
+writer, resume-exact semantics, compression error feedback."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.data.pipeline import DataConfig, make_batch
+from repro.optim import adamw, compress
+from repro.train import step as step_mod
+from repro.train.ckpt import Checkpointer
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = configs.get_reduced("granite-3-2b")
+    state = step_mod.init_state(cfg, jax.random.PRNGKey(0))
+    return cfg, state
+
+
+def _loop(cfg, state, steps, *, accum=1, seed=0, lr=1e-2):
+    train_step = jax.jit(step_mod.make_train_step(
+        cfg, accum=accum, peak_lr=lr, warmup_steps=5, total_steps=steps,
+        xent_chunk=16))
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=4, seed=seed)
+    losses = []
+    for i in range(steps):
+        batch = {k: jnp.asarray(v)
+                 for k, v in make_batch(dcfg, i, model_cfg=cfg).items()}
+        state, metrics = train_step(state, batch)
+        losses.append(float(metrics["loss"]))
+    return state, losses
+
+
+def test_loss_decreases(tiny):
+    cfg, state = tiny
+    _, losses = _loop(cfg, jax.tree.map(lambda x: x, state), 15)
+    assert losses[-1] < losses[0] - 0.1, losses
+    assert all(np.isfinite(losses))
+
+
+def test_grad_accum_matches_full_batch(tiny):
+    """accum=2 over the same global batch == accum=1 (same grads/step)."""
+    cfg, state0 = tiny
+    s1, l1 = _loop(cfg, jax.tree.map(lambda x: x, state0), 3, accum=1)
+    s2, l2 = _loop(cfg, jax.tree.map(lambda x: x, state0), 3, accum=2)
+    # token-weighted losses differ only by microbatch averaging; params stay
+    # numerically close because every token has identical weight here
+    for a, b in zip(jax.tree.leaves(s1["params"]),
+                    jax.tree.leaves(s2["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=2e-4)
+
+
+def test_ckpt_roundtrip(tmp_path, tiny):
+    cfg, state = tiny
+    ck = Checkpointer(tmp_path, keep=2)
+    ck.save(state, 7)
+    restored, step = ck.restore(state)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_ckpt_async_and_gc(tmp_path, tiny):
+    cfg, state = tiny
+    ck = Checkpointer(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save_async(state, s)
+    ck.wait()
+    steps = sorted(p.name for p in tmp_path.glob("step_*.npz"))
+    assert len(steps) == 2 and steps[-1] == "step_00000004.npz"
+    assert ck.latest_step() == 4
+
+
+def test_resume_reproduces_uninterrupted_run(tmp_path, tiny):
+    """ckpt at step 5 + 5 more steps == 10 straight steps (data keyed by
+    step counter makes the loader position implicit)."""
+    cfg, state0 = tiny
+    s_straight, _ = _loop(cfg, jax.tree.map(lambda x: x, state0), 10)
+    s_half, _ = _loop(cfg, jax.tree.map(lambda x: x, state0), 5)
+    ck = Checkpointer(tmp_path)
+    ck.save(s_half, 5)
+    restored, _ = ck.restore(s_half)
+    train_step = jax.jit(step_mod.make_train_step(
+        cfg, accum=1, peak_lr=1e-2, warmup_steps=5, total_steps=10,
+        xent_chunk=16))
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=4, seed=0)
+    state = restored
+    for i in range(5, 10):
+        batch = {k: jnp.asarray(v)
+                 for k, v in make_batch(dcfg, i, model_cfg=cfg).items()}
+        state, _ = train_step(state, batch)
+    for a, b in zip(jax.tree.leaves(s_straight["params"]),
+                    jax.tree.leaves(state["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_compression_error_feedback_converges(tiny):
+    """int8 EF-compressed training still reduces the loss."""
+    cfg, _ = tiny
+    state = step_mod.init_state(cfg, jax.random.PRNGKey(2),
+                                use_compression=True)
+    train_step = jax.jit(step_mod.make_train_step(
+        cfg, accum=1, peak_lr=1e-2, warmup_steps=2, total_steps=12,
+        use_compression=True, xent_chunk=16))
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=4, seed=1)
+    losses = []
+    for i in range(12):
+        batch = {k: jnp.asarray(v)
+                 for k, v in make_batch(dcfg, i, model_cfg=cfg).items()}
+        state, metrics = train_step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.1
+    # error buffers are actually nonzero (feedback active)
+    err_norm = adamw.global_norm(state["err"])
+    assert float(err_norm) > 0
+
+
+def test_quantize_dequantize_bounds():
+    x = jnp.asarray(np.random.RandomState(0).standard_normal(1000),
+                    jnp.float32)
+    q, s = compress.quantize(x)
+    err = np.abs(np.asarray(compress.dequantize(q, s) - x))
+    assert err.max() <= float(s) * 0.5 + 1e-6
+
+
+def test_adamw_step_direction():
+    params = {"w": jnp.ones((4,), jnp.float32)}
+    grads = {"w": jnp.asarray([1.0, -1.0, 0.0, 2.0])}
+    st = adamw.init(params)
+    p2, st2, _ = adamw.update(grads, st, params, lr=0.1, weight_decay=0.0)
+    # sign(update) == -sign(grad) on first step
+    assert p2["w"][0] < 1.0 and p2["w"][1] > 1.0 and p2["w"][3] < 1.0
+    assert int(st2.step) == 1
