@@ -20,7 +20,8 @@ def main(argv=None) -> int:
     quick = not args.full
 
     from benchmarks import (energy_overhead, roofline, scaling, sched_bench,
-                            sharing_perf, traces_bench, validation)
+                            sharing_perf, sweep_bench, traces_bench,
+                            validation)
     modules = {
         "validation": validation,        # Fig 7/8/9/10
         "sharing_perf": sharing_perf,    # Fig 12 / Table 3
@@ -29,6 +30,7 @@ def main(argv=None) -> int:
         "energy_overhead": energy_overhead,  # Fig 16/17
         "roofline": roofline,            # §Roofline
         "sched": sched_bench,            # energy-aware fleet matrix
+        "sweep": sweep_bench,            # batched 8-point scenario sweep
     }
     if args.only:
         keep = set(args.only.split(","))
@@ -48,6 +50,11 @@ def main(argv=None) -> int:
             failures += 1
         wall = time.time() - t0
         (outdir / f"{name}.json").write_text(json.dumps(rows, indent=1))
+        if name == "sweep" and status == "ok":
+            # stable perf-trajectory artifact: batched-sweep events/sec
+            # (only on success — never clobber the trajectory with an error)
+            (outdir / "BENCH_sweep.json").write_text(
+                json.dumps(rows, indent=1))
         print(f"== {name} [{status}] ({wall:.1f}s) " + "=" * 40)
         for row in rows if isinstance(rows, list) else [rows]:
             print("  " + json.dumps(row)[:240])

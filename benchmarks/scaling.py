@@ -19,11 +19,11 @@ from repro.core import engine
 from repro.core.trace import filter_fitting, gwa_like_trace, synthetic_trace
 
 
-def _wall(spec, trace) -> float:
-    res = engine.simulate(spec, trace)
+def _wall(spec, params, trace) -> float:
+    res = engine.simulate(spec, trace, params=params)
     jax.block_until_ready(res.t_end)
     t0 = time.time()
-    jax.block_until_ready(engine.simulate(spec, trace).t_end)
+    jax.block_until_ready(engine.simulate(spec, trace, params=params).t_end)
     return time.time() - t0
 
 
@@ -33,17 +33,17 @@ def fig13_scaling_ratio(quick=True) -> list[dict]:
     n_base = 500 if quick else 5000
     for rho, d in ((( 10.0, 90.0), 10.0), ((200.0, 3600.0), 10.0),
                    ((10.0, 90.0), 200.0), ((200.0, 3600.0), 200.0)):
-        spec = engine.CloudSpec(n_pm=1, n_vm=4096, pm_cores=1e9,
-                                perf_core=1.0, image_mb=1e-4,
-                                boot_work=1e-6, latency_s=1e-6,
-                                max_events=4_000_000)
+        spec, params = engine.make_cloud(n_pm=1, n_vm=4096, pm_cores=1e9,
+                                         perf_core=1.0, image_mb=1e-4,
+                                         boot_work=1e-6, latency_s=1e-6,
+                                         max_events=4_000_000)
         t1 = synthetic_trace(n_base, 1, spread_s=d, length_range=rho,
                              seed=1)
-        base = _wall(spec, t1) / n_base
+        base = _wall(spec, params, t1) / n_base
         for n in parallels:
             tn = synthetic_trace(max(n, n_base), n, spread_s=d,
                                  length_range=rho, seed=n)
-            per_task = _wall(spec, tn) / tn.n
+            per_task = _wall(spec, params, tn) / tn.n
             rows.append({
                 "name": "fig13_scaling_ratio",
                 "length_range": list(rho), "spread_s": d, "parallel": n,
@@ -65,9 +65,10 @@ def fig15_infra_scaling(quick=True) -> list[dict]:
             walls = {}
             for n in counts:
                 trace = filter_fitting(gwa_like_trace(fam, n, seed=7), 64.0)
-                spec = engine.CloudSpec(n_pm=mc, n_vm=2048, pm_cores=64.0,
-                                        max_events=4_000_000)
-                walls[n] = _wall(spec, trace)
+                spec, params = engine.make_cloud(n_pm=mc, n_vm=2048,
+                                                 pm_cores=64.0,
+                                                 max_events=4_000_000)
+                walls[n] = _wall(spec, params, trace)
             n1, n2 = counts[0], counts[-1]
             s = (n2 * walls[n1]) / (n1 * walls[n2])  # Eq. 17
             rows.append({"name": "fig15_infra_scaling", "family": fam,

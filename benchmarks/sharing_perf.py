@@ -17,7 +17,6 @@ from __future__ import annotations
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.baseline.pydes import PyDESCloud
@@ -34,18 +33,18 @@ def _tasks_for(parallel: int, quick: bool) -> int:
     return max(min(base, 20 * parallel), 200)
 
 
-def _spec(n_tasks: int) -> engine.CloudSpec:
-    return engine.CloudSpec(n_pm=1, n_vm=min(n_tasks, 16384),
-                            pm_cores=1e9, perf_core=1.0, image_mb=1e-4,
-                            boot_work=1e-6, latency_s=1e-6,
-                            max_events=4_000_000)
+def _cloud(n_tasks: int):
+    return engine.make_cloud(n_pm=1, n_vm=min(n_tasks, 16384),
+                             pm_cores=1e9, perf_core=1.0, image_mb=1e-4,
+                             boot_work=1e-6, latency_s=1e-6,
+                             max_events=4_000_000)
 
 
-def _run_engine(spec, trace) -> float:
-    res = engine.simulate(spec, trace)
+def _run_engine(spec, params, trace) -> float:
+    res = engine.simulate(spec, trace, params=params)
     jax.block_until_ready(res.t_end)
     t0 = time.time()
-    res = engine.simulate(spec, trace)
+    res = engine.simulate(spec, trace, params=params)
     jax.block_until_ready(res.t_end)
     return time.time() - t0
 
@@ -56,21 +55,20 @@ def run(quick=True) -> list[dict]:
         n = _tasks_for(par, quick)
         trace = synthetic_trace(n, par, spread_s=10.0,
                                 length_range=(10.0, 90.0), seed=par)
-        spec = _spec(n)
-        wall = _run_engine(spec, trace)
+        spec, params = _cloud(n)
+        wall = _run_engine(spec, params, trace)
         row = {"name": "fig12_sharing_perf", "parallel": par, "tasks": n,
                "dissect_wall_s": round(wall, 4),
                "dissect_tasks_per_s": round(n / wall, 1)}
 
-        # vmap-batched scenarios (8 replicas, different seeds)
+        # batched scenarios (8 trace replicas, different seeds) — one
+        # simulate_batch call, one compile
         reps = [synthetic_trace(n, par, spread_s=10.0, seed=par * 10 + i)
                 for i in range(8)]
-        batch = jax.tree.map(lambda *x: jnp.stack(x), *reps)
-        vsim = jax.jit(jax.vmap(lambda tr: engine.simulate(spec, tr).t_end),
-                       static_argnums=())
-        jax.block_until_ready(vsim(batch))
+        batch = engine.stack_traces(reps)
+        jax.block_until_ready(engine.simulate_batch(spec, batch, params).t_end)
         t0 = time.time()
-        jax.block_until_ready(vsim(batch))
+        jax.block_until_ready(engine.simulate_batch(spec, batch, params).t_end)
         vwall = time.time() - t0
         row["vmap8_wall_s"] = round(vwall, 4)
         row["vmap8_tasks_per_s"] = round(8 * n / vwall, 1)

@@ -23,16 +23,17 @@ def run(quick=True) -> list[dict]:
     rows = []
     fams = ("das2", "grid5000", "lcg") if quick else tuple(GWA_FAMILIES)
     counts = (100, 1000) if quick else (100, 1000, 10000, 100000)
-    spec = engine.CloudSpec(n_pm=20, n_vm=2048, pm_cores=64.0,
-                            max_events=6_000_000)
+    spec, params = engine.make_cloud(n_pm=20, n_vm=2048, pm_cores=64.0,
+                                     max_events=6_000_000)
     for n in counts:
         walls = []
         for fam in fams:
             trace = filter_fitting(gwa_like_trace(fam, n, seed=3), 64.0)
-            res = engine.simulate(spec, trace)
+            res = engine.simulate(spec, trace, params=params)
             jax.block_until_ready(res.t_end)
             t0 = time.time()
-            jax.block_until_ready(engine.simulate(spec, trace).t_end)
+            jax.block_until_ready(
+                engine.simulate(spec, trace, params=params).t_end)
             walls.append(time.time() - t0)
         rows.append({"name": "fig14_trace_runtime", "tasks": n,
                      "families": list(fams),
@@ -43,7 +44,7 @@ def run(quick=True) -> list[dict]:
     fam = "das2"
     n = 150
     trace = filter_fitting(gwa_like_trace(fam, n, seed=5), 64.0)
-    res = engine.simulate(spec, trace)
+    res = engine.simulate(spec, trace, params=params)
     py = PyDESCloud(n_pm=20, pm_cores=64.0)
     pres = py.run(np.asarray(trace.arrival), np.asarray(trace.cores),
                   np.asarray(trace.work))

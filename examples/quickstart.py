@@ -20,14 +20,24 @@ from repro.train import step as step_mod
 
 # ---------------------------------------------------------------- 1. simulate
 print("=== 1. DISSECT-CF cloud simulation " + "=" * 30)
-spec = engine.CloudSpec(n_pm=4, n_vm=64, pm_cores=64.0,
-                        pm_sched="ondemand")
+# CloudSpec holds the static shape (jit-recompiles when it changes);
+# CloudParams holds every continuous knob + scheduler codes (traced data —
+# change or batch them freely under one compile).
+spec = engine.CloudSpec(n_pm=4, n_vm=64)
+params = engine.CloudParams(pm_cores=64.0, pm_sched="ondemand")
 trace = synthetic_trace(n_tasks=200, parallel=32, spread_s=20.0, seed=0)
-res = engine.simulate(spec, trace)
+res = engine.simulate(spec, trace, params=params)
 print(f"simulated {trace.n} tasks in {int(res.n_events)} events; "
       f"makespan {float(res.t_end):.0f}s; "
       f"energy {float(jnp.sum(res.energy))/3.6e6:.2f} kWh; "
       f"rejected {int(res.rejected.sum())}")
+
+# batched scenario sweep: 4 NIC bandwidths, one compile, one vmapped run
+sweep = engine.CloudParams(pm_cores=64.0, pm_sched="ondemand",
+                           net_bw=jnp.asarray([62.5, 125.0, 250.0, 500.0]))
+bres = engine.simulate_batch(spec, trace, sweep)
+print("net_bw sweep makespans:",
+      [f"{float(t):.0f}s" for t in bres.t_end])
 
 # ------------------------------------------------------------------- 2. train
 print("=== 2. train a reduced jamba (mamba+MoE hybrid) " + "=" * 18)

@@ -24,21 +24,33 @@ import jax.numpy as jnp
 
 from . import machine as mc
 from .energy import PM_RUNNING
-from .engine import (CloudSpec, CloudState, TASK_ACTIVE, TASK_DONE,
-                     TASK_PENDING, TASK_REJECTED, Trace)
+from .engine import (CloudParams, CloudSpec, CloudState, PM_SCHEDULERS,
+                     TASK_ACTIVE, TASK_DONE, TASK_PENDING, TASK_REJECTED,
+                     Trace, VM_SCHEDULERS)
 
 
-def cloud_info(spec: CloudSpec, st: CloudState, trace: Trace) -> dict[str, Any]:
-    """One-time-query information APIs (paper §3.5.2 list)."""
+def _sched_name(code, names: tuple[str, ...]) -> str:
+    try:
+        return names[int(jnp.asarray(code))]
+    except (TypeError, jax.errors.ConcretizationTypeError):
+        return "<traced>"
+
+
+def cloud_info(spec: CloudSpec, params: CloudParams, st: CloudState,
+               trace: Trace) -> dict[str, Any]:
+    """One-time-query information APIs (paper §3.5.2 list).
+
+    Host-side, single-scenario: ``params`` must be an unbatched point."""
     P = spec.n_pm
+    pm_cores = float(jnp.asarray(params.pm_cores))
     running = st.pstate == PM_RUNNING
     hosted = st.vstage != mc.VM_FREE
     queued = (st.task_state == TASK_PENDING) & (trace.arrival <= st.t)
     per_pm_vms = jax.ops.segment_sum(
         hosted.astype(jnp.int32), st.vm_host, num_segments=P)
-    total_cores = spec.pm_cores * P
-    running_cores = float(jnp.sum(jnp.where(running, spec.pm_cores, 0.0)))
-    used = jnp.where(running, spec.pm_cores - st.free_cores, 0.0)
+    total_cores = pm_cores * P
+    running_cores = float(jnp.sum(jnp.where(running, pm_cores, 0.0)))
+    used = jnp.where(running, pm_cores - st.free_cores, 0.0)
     return {
         "t": float(st.t),
         "pm_running_ratio": float(running.sum()) / P,
@@ -48,11 +60,11 @@ def cloud_info(spec: CloudSpec, st: CloudState, trace: Trace) -> dict[str, Any]:
         "capacity_total_cores": float(total_cores),
         "capacity_running_cores": running_cores,
         "capacity_allocated_cores": float(used.sum()),
-        "pm_load": [float(x) for x in (used / spec.pm_cores)],
+        "pm_load": [float(x) for x in (used / pm_cores)],
         "pm_vm_count": [int(x) for x in per_pm_vms],
         "queue_len": int(queued.sum()),
-        "vm_scheduler": spec.vm_sched,
-        "pm_scheduler": spec.pm_sched,
+        "vm_scheduler": _sched_name(params.vm_sched, VM_SCHEDULERS),
+        "pm_scheduler": _sched_name(params.pm_sched, PM_SCHEDULERS),
         "tasks_done": int((st.task_state == TASK_DONE).sum()),
         "tasks_rejected": int((st.task_state == TASK_REJECTED).sum()),
         "tasks_active": int((st.task_state == TASK_ACTIVE).sum()),
@@ -60,8 +72,8 @@ def cloud_info(spec: CloudSpec, st: CloudState, trace: Trace) -> dict[str, Any]:
     }
 
 
-def deregister_pm(spec: CloudSpec, st: CloudState, pm: int,
-                  trace: Trace) -> CloudState:
+def deregister_pm(spec: CloudSpec, params: CloudParams, st: CloudState,
+                  pm: int, trace: Trace) -> CloudState:
     """Violently deregister a PM (paper §3.5.2 infrastructure alteration):
     its VMs are terminated abruptly (tasks go back to PENDING so user-side
     schedulers can observe and re-submit — error-resilience scenarios)."""
@@ -78,7 +90,8 @@ def deregister_pm(spec: CloudSpec, st: CloudState, pm: int,
         f_active=st.f_active.at[:V].set(
             jnp.where(victim, False, st.f_active[:V])),
         pstate=st.pstate.at[pm].set(jnp.int32(0)),  # PM_OFF
-        free_cores=st.free_cores.at[pm].set(spec.pm_cores),
+        free_cores=st.free_cores.at[pm].set(
+            jnp.asarray(params.pm_cores, jnp.float32)),
         running=jnp.bool_(True),
     )
 

@@ -1,7 +1,29 @@
 """The vectorized IaaS cloud engine (paper §3.1-§3.5 in one event loop).
 
+Configuration is split into two halves so that *many scenarios share one
+compiled program*:
+
+* :class:`CloudSpec` — shape/topology/compile-time choices only (``n_pm``,
+  ``n_vm``, the low-level sharing-scheduler name, backend, event caps).  It
+  is hashable and passed to ``jax.jit`` as a static argument; changing it
+  recompiles.
+* :class:`CloudParams` — every continuous knob (bandwidths, image size,
+  boot work, latency, metering period, hidden-consumer work, the
+  :class:`~repro.core.energy.PowerStateTable`) **and** the VM/PM scheduler
+  selection (integer codes).  It is a registered-dataclass pytree traced as
+  data: two simulations with different ``CloudParams`` reuse the same XLA
+  executable, and any leaf may carry a leading batch axis for
+  :func:`simulate_batch`.
+
 One :func:`simulate` call runs a whole trace-driven cloud scenario to
-completion inside a single jitted ``lax.while_loop``:
+completion inside a single jitted ``lax.while_loop``; one
+:func:`simulate_batch` call ``jax.vmap``s that loop over stacked traces
+and/or stacked parameter points — an 8-point scenario sweep (Pareto fronts
+over power models, trace ensembles, scheduler tournaments) compiles once
+and runs hardware-parallel, which is how this reproduction extends the
+paper's "fast evaluation of many scheduling scenarios" goal (§1, §4.3).
+
+The simulation semantics are unchanged by the split:
 
 * **Timed / time-jump control (§3.1)** — every iteration computes the event
   horizon ``dt = min(next completion, next task arrival, PM power-state end,
@@ -9,19 +31,21 @@ completion inside a single jitted ``lax.while_loop``:
   that; rates are piecewise-constant between events so the jump is exact.
 * **Unified resource sharing (§3.2)** — CPU, network and disk live in one
   flat spreader space (:class:`repro.core.machine.SpreaderLayout`); the
-  max-min progressive-filling scheduler from :mod:`repro.core.fairshare`
-  assigns all rates at once.
+  low-level sharing logic is looked up in :data:`repro.core.fairshare.SCHEDULERS`
+  by ``spec.scheduler`` and assigns all rates at once.
 * **Energy metering (§3.3)** — exact piecewise integration of the per-PM
   power model every horizon (our improvement), plus the paper's periodic
-  *sampled* metering when ``metering_period > 0`` (reproduces the Fig. 16/17
-  overhead trade-off: each sample is an extra event).
+  *sampled* metering when ``params.metering_period > 0`` (reproduces the
+  Fig. 16/17 overhead trade-off).  The period is data: one program covers
+  metered and meter-less points via ``jnp.isfinite`` masking.
 * **Infrastructure (§3.4)** — PM power-state machine (Table 1/2, incl. the
   *hidden consumer* complex model), VM lifecycle (Fig. 6) where each VM slot
   rewrites its single consumption in place: image transfer -> boot -> task
   (-> optional migration).
 * **Management (§3.5)** — first-fit / non-queuing / smallest-first VM
   schedulers and always-on / on-demand PM schedulers as masked vector
-  decisions inside the loop.
+  decisions selected by ``params.vm_sched`` / ``params.pm_sched`` integer
+  codes — the whole scheduler matrix batches through one compile.
 
 The per-entity capacities (PMs ``P``, VM slots ``V``, tasks ``T``) are
 static; overflow is reported, never silent.
@@ -30,7 +54,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -39,7 +63,7 @@ from . import machine as mc
 from .arrays import KIND_BOOT, KIND_HIDDEN, KIND_IMAGE_XFER, KIND_TASK
 from .energy import (PM_OFF, PM_RUNNING, PM_SWITCHING_OFF, PM_SWITCHING_ON,
                      PowerStateTable, instantaneous_power)
-from .fairshare import equal_share_rates, maxmin_rates
+from .fairshare import SCHEDULERS
 
 KIND_MIGRATE = 5
 
@@ -51,42 +75,127 @@ TASK_ACTIVE = 1    # bound to a VM
 TASK_DONE = 2
 TASK_REJECTED = 3
 
+# VM/PM scheduler codes: index into these tuples == the CloudParams code.
 VM_SCHEDULERS = ("firstfit", "nonqueuing", "smallestfirst")
 PM_SCHEDULERS = ("alwayson", "ondemand")
+VM_FIRSTFIT, VM_NONQUEUING, VM_SMALLESTFIRST = range(3)
+PM_ALWAYSON, PM_ONDEMAND = range(2)
 
 
 @dataclasses.dataclass(frozen=True)
 class CloudSpec:
-    """Static description of the simulated cloud (hashable -> jit-static)."""
+    """Static cloud description (hashable -> jit-static).
+
+    Only shape/topology and compile-time algorithm choices live here;
+    every continuous knob is in :class:`CloudParams`.
+    """
 
     n_pm: int = 4
     n_vm: int = 64               # max simultaneously existing VMs
-    pm_cores: float = 64.0
-    perf_core: float = 1.0       # processing units per core-second
-    net_bw: float = 125.0        # MB/s per PM NIC (1 Gb/s)
-    repo_bw: float = 250.0       # MB/s repository egress
-    image_mb: float = 100.0      # VM image size (paper §4.2.2 uses 100 MB)
-    boot_work: float = 10.0      # core-seconds of boot processing
-    vm_mem_mb: float = 1024.0    # serialized memory state (migration)
-    latency_s: float = 0.001
-    vm_sched: str = "firstfit"
-    pm_sched: str = "alwayson"
-    metering_period: float = 0.0  # 0 => exact integration only (no tick events)
-    complex_power: bool = False   # Table 2 hidden-consumer transition model
-    hidden_work_on: float = 40.0   # core-s consumed while switching on (complex)
-    hidden_work_off: float = 2.4   # core-s consumed while switching off
-    scheduler: str = "maxmin"     # low-level sharing logic
-    backend: str = "jnp"          # 'jnp' | 'pallas' segmented reductions
+    complex_power: bool = False  # Table 2 hidden-consumer transition model
+    scheduler: str = "maxmin"    # low-level sharing logic (fairshare.SCHEDULERS)
+    backend: str = "jnp"         # 'jnp' | 'pallas' segmented reductions
     max_events: int = 2_000_000
     max_fill_iters: int = 64
 
     def __post_init__(self):
-        assert self.vm_sched in VM_SCHEDULERS, self.vm_sched
-        assert self.pm_sched in PM_SCHEDULERS, self.pm_sched
+        assert self.scheduler in SCHEDULERS, (
+            f"unknown sharing scheduler {self.scheduler!r}; "
+            f"registered: {sorted(SCHEDULERS)}")
 
     @property
     def layout(self) -> mc.SpreaderLayout:
         return mc.SpreaderLayout(self.n_pm, self.n_vm)
+
+
+def _sched_code(value, names: tuple[str, ...]):
+    """Map a scheduler name to its integer code; range-check concrete codes;
+    pass traced/batched values through."""
+    if isinstance(value, str):
+        if value not in names:
+            raise ValueError(f"unknown scheduler {value!r}; one of {names}")
+        return names.index(value)
+    concrete_int = (isinstance(value, int) and not isinstance(value, bool))
+    if (value is not None and not concrete_int and jnp.ndim(value) == 0
+            and not isinstance(value, jax.core.Tracer)):
+        try:  # concrete 0-d integer arrays/np scalars are checkable too
+            concrete_int = jnp.issubdtype(jnp.asarray(value).dtype,
+                                          jnp.integer)
+        except TypeError:
+            concrete_int = False
+    if concrete_int and not 0 <= int(value) < len(names):
+        raise ValueError(
+            f"scheduler code {int(value)} out of range; "
+            f"0..{len(names) - 1} index {names}")
+    return value
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CloudParams:
+    """Continuous/traced cloud parameters — a pytree of (batchable) leaves.
+
+    Scalars may be python floats, 0-d arrays, or ``[B]`` arrays for a
+    batched sweep via :func:`simulate_batch`; ``power`` is a
+    :class:`PowerStateTable` whose rows may likewise carry a leading batch
+    axis.  ``vm_sched`` / ``pm_sched`` accept scheduler *names* at
+    construction time and store integer codes (indices into
+    :data:`VM_SCHEDULERS` / :data:`PM_SCHEDULERS`), so the scheduler matrix
+    is data — sweeping it does not recompile.
+    """
+
+    pm_cores: object = 64.0
+    perf_core: object = 1.0       # processing units per core-second
+    net_bw: object = 125.0        # MB/s per PM NIC (1 Gb/s)
+    repo_bw: object = 250.0       # MB/s repository egress
+    image_mb: object = 100.0      # VM image size (paper §4.2.2 uses 100 MB)
+    boot_work: object = 10.0      # core-seconds of boot processing
+    vm_mem_mb: object = 1024.0    # serialized memory state (migration)
+    latency_s: object = 0.001
+    metering_period: object = 0.0  # 0 => exact integration only (no ticks)
+    hidden_work_on: object = 40.0  # core-s consumed while switching on (complex)
+    hidden_work_off: object = 2.4  # core-s consumed while switching off
+    vm_sched: object = 0           # code into VM_SCHEDULERS (str accepted)
+    pm_sched: object = 0           # code into PM_SCHEDULERS (str accepted)
+    power: PowerStateTable = None  # per-power-state consumption model
+
+    def __post_init__(self):
+        object.__setattr__(self, "vm_sched",
+                           _sched_code(self.vm_sched, VM_SCHEDULERS))
+        object.__setattr__(self, "pm_sched",
+                           _sched_code(self.pm_sched, PM_SCHEDULERS))
+        if self.power is None:
+            object.__setattr__(self, "power", PowerStateTable.simple())
+
+    @classmethod
+    def for_spec(cls, spec: CloudSpec, **kw) -> "CloudParams":
+        """Defaults consistent with ``spec`` (complex power model when
+        ``spec.complex_power``), overridable per keyword."""
+        if "power" not in kw:
+            kw["power"] = (PowerStateTable.complex_model()
+                           if spec.complex_power else PowerStateTable.simple())
+        return cls(**kw)
+
+
+def make_cloud(**kw) -> tuple[CloudSpec, CloudParams]:
+    """Build a (CloudSpec, CloudParams) pair from one flat kwargs dict,
+    routing each keyword to the half it belongs to."""
+    spec_names = {f.name for f in dataclasses.fields(CloudSpec)}
+    param_names = {f.name for f in dataclasses.fields(CloudParams)}
+    unknown = set(kw) - spec_names - param_names
+    if unknown:
+        raise TypeError(f"unknown cloud option(s): {sorted(unknown)}")
+    spec = CloudSpec(**{k: v for k, v in kw.items() if k in spec_names})
+    params = CloudParams.for_spec(
+        spec, **{k: v for k, v in kw.items() if k in param_names})
+    return spec, params
+
+
+def stack_params(params: Sequence[CloudParams]) -> CloudParams:
+    """Stack parameter points leaf-wise along a new leading batch axis
+    (input to :func:`simulate_batch`)."""
+    return jax.tree.map(
+        lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *params)
 
 
 class Trace(NamedTuple):
@@ -99,6 +208,11 @@ class Trace(NamedTuple):
     @property
     def n(self) -> int:
         return self.arrival.shape[0]
+
+
+def stack_traces(traces: Sequence[Trace]) -> Trace:
+    """Stack equal-length traces along a new leading batch axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *traces)
 
 
 class CloudState(NamedTuple):
@@ -153,14 +267,19 @@ class CloudResult(NamedTuple):
     overflow: jax.Array
 
 
-def init_state(spec: CloudSpec, trace: Trace) -> CloudState:
+def init_state(spec: CloudSpec, trace: Trace,
+               params: CloudParams | None = None) -> CloudState:
+    if params is None:
+        params = CloudParams.for_spec(spec)
     P, V, T = spec.n_pm, spec.n_vm, trace.n
     lay = spec.layout
     F = V + P
     zf = jnp.zeros((F,), jnp.float32)
     zi = jnp.zeros((F,), jnp.int32)
-    start_running = spec.pm_sched == "alwayson"
-    pstate0 = jnp.full((P,), PM_RUNNING if start_running else PM_OFF, jnp.int32)
+    start_running = params.pm_sched == PM_ALWAYSON
+    pstate0 = jnp.broadcast_to(
+        jnp.where(start_running, PM_RUNNING, PM_OFF), (P,)).astype(jnp.int32)
+    period = jnp.asarray(params.metering_period, jnp.float32)
     return CloudState(
         t=jnp.float32(0.0), t_c=jnp.float32(0.0), n_events=jnp.int32(0),
         f_pr=zf, f_total=zf, f_pl=zf + _BIG, f_prov=zi, f_cons=zi,
@@ -177,58 +296,65 @@ def init_state(spec: CloudSpec, trace: Trace) -> CloudState:
         vm_mig_dst=jnp.zeros((V,), jnp.int32),
         pstate=pstate0,
         pstate_end=jnp.full((P,), jnp.inf, jnp.float32),
-        free_cores=jnp.full((P,), spec.pm_cores, jnp.float32),
+        free_cores=jnp.full((P,), jnp.asarray(params.pm_cores, jnp.float32)),
         energy_hi=jnp.zeros((P,), jnp.float32),
         energy_lo=jnp.zeros((P,), jnp.float32),
         energy_sampled=jnp.zeros((P,), jnp.float32),
-        meter_next=jnp.float32(spec.metering_period
-                               if spec.metering_period > 0 else jnp.inf),
+        meter_next=jnp.where(period > 0, period, jnp.inf).astype(jnp.float32),
         processed=jnp.zeros((lay.S,), jnp.float32),
         overflow=jnp.bool_(False),
         running=jnp.bool_(True),
     )
 
 
-def _spreader_perf(spec: CloudSpec, st: CloudState) -> jax.Array:
+def _spreader_perf(spec: CloudSpec, params: CloudParams,
+                   st: CloudState) -> jax.Array:
     """perf[S] from machine states (Eq. 5: power state gates processing)."""
     lay = spec.layout
     P, V = spec.n_pm, spec.n_vm
+    cpu_cap = params.pm_cores * params.perf_core
     perf = jnp.zeros((lay.S,), jnp.float32)
     cpu_on = st.pstate == PM_RUNNING
     if spec.complex_power:
         cpu_on = cpu_on | (st.pstate == PM_SWITCHING_ON) | (
             st.pstate == PM_SWITCHING_OFF)
     perf = perf.at[lay.cpu0:lay.cpu0 + P].set(
-        jnp.where(cpu_on, spec.pm_cores * spec.perf_core, 0.0))
+        jnp.where(cpu_on, cpu_cap, 0.0))
     net_on = st.pstate != PM_OFF
     perf = perf.at[lay.netin0:lay.netin0 + P].set(
-        jnp.where(net_on, spec.net_bw, 0.0))
+        jnp.where(net_on, params.net_bw, 0.0))
     perf = perf.at[lay.netout0:lay.netout0 + P].set(
-        jnp.where(net_on, spec.net_bw, 0.0))
-    perf = perf.at[lay.repo_out].set(spec.repo_bw)
-    perf = perf.at[lay.repo_disk].set(spec.repo_bw)
+        jnp.where(net_on, params.net_bw, 0.0))
+    perf = perf.at[lay.repo_out].set(params.repo_bw)
+    perf = perf.at[lay.repo_disk].set(params.repo_bw)
     vm_on = mc.vm_cpu_active(st.vstage) | (st.vstage == mc.VM_INITIAL_TRANSFER)
     perf = perf.at[lay.vm0:lay.vm0 + V].set(
-        jnp.where(vm_on, jnp.maximum(st.vm_cores, 1.0) * spec.perf_core, 0.0))
-    perf = perf.at[lay.hidden0:lay.hidden0 + P].set(spec.pm_cores * spec.perf_core)
+        jnp.where(vm_on, jnp.maximum(st.vm_cores, 1.0) * params.perf_core, 0.0))
+    perf = perf.at[lay.hidden0:lay.hidden0 + P].set(
+        jnp.broadcast_to(cpu_cap, (P,)))
     return perf
 
 
 def _rates(spec: CloudSpec, st: CloudState, perf: jax.Array):
     thresh = 1e-6 * st.f_total + 1e-9
     live = st.f_active & (st.t >= st.f_release) & (st.f_pr > thresh)
-    if spec.scheduler == "maxmin":
-        r = maxmin_rates(st.f_prov, st.f_cons, st.f_pl, live, perf,
-                         backend=spec.backend, max_iters=spec.max_fill_iters)
-    else:
-        r = equal_share_rates(st.f_prov, st.f_cons, st.f_pl, live, perf)
+    rate_fn = SCHEDULERS[spec.scheduler]
+    r = rate_fn(st.f_prov, st.f_cons, st.f_pl, live, perf,
+                backend=spec.backend, max_iters=spec.max_fill_iters)
     return r, live, thresh
 
 
-def _dispatch_loop(spec: CloudSpec, trace: Trace, st: CloudState) -> CloudState:
-    """VM scheduler (§3.5.1): serve the request queue until blocked/empty."""
+def _dispatch_loop(spec: CloudSpec, params: CloudParams, trace: Trace,
+                   st: CloudState) -> CloudState:
+    """VM scheduler (§3.5.1): serve the request queue until blocked/empty.
+
+    The scheduler identity is data (``params.vm_sched``): the queue key and
+    the rejection rule are masked selections, so one compiled program covers
+    first-fit, non-queuing and smallest-first."""
     lay = spec.layout
     P, V, T = spec.n_pm, spec.n_vm, trace.n
+    is_smallest = jnp.asarray(params.vm_sched) == VM_SMALLESTFIRST
+    is_nonqueue = jnp.asarray(params.vm_sched) == VM_NONQUEUING
 
     def queued_mask(task_state):
         return (task_state == TASK_PENDING) & (trace.arrival <= st.t)
@@ -241,14 +367,13 @@ def _dispatch_loop(spec: CloudSpec, trace: Trace, st: CloudState) -> CloudState:
         st2, _ = s
         queued = queued_mask(st2.task_state)
         any_q = queued.any()
-        if spec.vm_sched == "smallestfirst":
-            key = jnp.where(queued, trace.cores, jnp.inf)
-        else:
-            key = jnp.where(queued, trace.arrival, jnp.inf)
+        key = jnp.where(queued,
+                        jnp.where(is_smallest, trace.cores, trace.arrival),
+                        jnp.inf)
         head = jnp.argmin(key).astype(jnp.int32)
         h_cores = trace.cores[head]
 
-        oversize = h_cores > spec.pm_cores  # can never fit -> reject always
+        oversize = h_cores > params.pm_cores  # can never fit -> reject always
         fit = mc.pm_accepting(st2.pstate) & (st2.free_cores >= h_cores)
         any_fit = fit.any()
         pm = jnp.argmax(fit).astype(jnp.int32)  # first fit
@@ -256,8 +381,7 @@ def _dispatch_loop(spec: CloudSpec, trace: Trace, st: CloudState) -> CloudState:
         any_v = vfree.any()
         v = jnp.argmax(vfree).astype(jnp.int32)
 
-        do_reject = any_q & (oversize |
-                             ((spec.vm_sched == "nonqueuing") & ~any_fit))
+        do_reject = any_q & (oversize | (is_nonqueue & ~any_fit))
         do_dispatch = any_q & ~do_reject & any_fit & any_v
         overflow = any_q & ~do_reject & any_fit & ~any_v
 
@@ -281,13 +405,13 @@ def _dispatch_loop(spec: CloudSpec, trace: Trace, st: CloudState) -> CloudState:
             vm_expiry=wv(st2.vm_expiry, jnp.inf),
             free_cores=st2.free_cores.at[pm].add(
                 jnp.where(do_dispatch, -h_cores, 0.0)),
-            f_pr=wv(st2.f_pr, spec.image_mb),
-            f_total=wv(st2.f_total, spec.image_mb),
+            f_pr=wv(st2.f_pr, params.image_mb),
+            f_total=wv(st2.f_total, params.image_mb),
             f_pl=wv(st2.f_pl, _BIG),
             f_prov=wv(st2.f_prov, lay.repo_out),
             f_cons=wv(st2.f_cons, lay.netin0 + pm),
             f_active=wv(st2.f_active, True),
-            f_release=wv(st2.f_release, st.t + spec.latency_s),
+            f_release=wv(st2.f_release, st.t + params.latency_s),
             f_kind=wv(st2.f_kind, KIND_IMAGE_XFER),
             overflow=st2.overflow | overflow,
         )
@@ -298,27 +422,30 @@ def _dispatch_loop(spec: CloudSpec, trace: Trace, st: CloudState) -> CloudState:
     return st
 
 
-def _pm_scheduler(spec: CloudSpec, trace: Trace, st: CloudState,
-                  table: PowerStateTable) -> CloudState:
+def _pm_scheduler(spec: CloudSpec, params: CloudParams, trace: Trace,
+                  st: CloudState) -> CloudState:
     """On-demand PM scheduler (§3.5.1): wake enough machines for the unmet
-    queue, switch off loadless machines when the queue is empty."""
-    if spec.pm_sched == "alwayson":
-        return st
+    queue, switch off loadless machines when the queue is empty.  The whole
+    pass is masked by ``params.pm_sched == ondemand`` so always-on clouds
+    run the identical (no-op) program."""
     P = spec.n_pm
+    table = params.power
+    ondemand = jnp.asarray(params.pm_sched) == PM_ONDEMAND
     queued = (st.task_state == TASK_PENDING) & (trace.arrival <= st.t)
     q_cores = jnp.sum(jnp.where(queued, trace.cores, 0.0))
     soon = mc.pm_future_capacity(st.pstate)
     cap_soon = jnp.sum(jnp.where(soon, st.free_cores, 0.0))
     deficit = q_cores - cap_soon
-    k = jnp.ceil(jnp.maximum(deficit, 0.0) / spec.pm_cores).astype(jnp.int32)
+    k = jnp.ceil(jnp.maximum(deficit, 0.0) / params.pm_cores).astype(jnp.int32)
 
     off = st.pstate == PM_OFF
-    wake = off & (jnp.cumsum(off.astype(jnp.int32)) <= k)
+    wake = ondemand & off & (jnp.cumsum(off.astype(jnp.int32)) <= k)
     # loadless running PMs sleep only when nothing is queued
     hosted = jax.ops.segment_sum(
         (st.vstage != mc.VM_FREE).astype(jnp.int32), st.vm_host,
         num_segments=P)
-    idle = (st.pstate == PM_RUNNING) & (hosted == 0) & ~queued.any()
+    idle = (ondemand & (st.pstate == PM_RUNNING) & (hosted == 0)
+            & ~queued.any())
 
     boot_s = table.duration[PM_SWITCHING_ON]
     halt_s = table.duration[PM_SWITCHING_OFF]
@@ -335,7 +462,7 @@ def _pm_scheduler(spec: CloudSpec, trace: Trace, st: CloudState,
         V = spec.n_vm
         hid = jnp.arange(P) + V  # flow-slot indices of hidden consumers
         trans = wake | idle
-        amount = jnp.where(wake, spec.hidden_work_on, spec.hidden_work_off)
+        amount = jnp.where(wake, params.hidden_work_on, params.hidden_work_off)
         st = st._replace(
             pstate_end=jnp.where(trans, jnp.inf, pstate_end),
             f_pr=st.f_pr.at[hid].set(
@@ -343,7 +470,7 @@ def _pm_scheduler(spec: CloudSpec, trace: Trace, st: CloudState,
             f_total=st.f_total.at[hid].set(
                 jnp.where(trans, amount, st.f_total[hid])),
             f_pl=st.f_pl.at[hid].set(
-                jnp.where(trans, 0.2 * spec.pm_cores, st.f_pl[hid])),
+                jnp.where(trans, 0.2 * params.pm_cores, st.f_pl[hid])),
             f_prov=st.f_prov.at[hid].set(
                 jnp.where(trans, lay.cpu0 + jnp.arange(P), st.f_prov[hid])),
             f_cons=st.f_cons.at[hid].set(
@@ -358,23 +485,20 @@ def _pm_scheduler(spec: CloudSpec, trace: Trace, st: CloudState,
     return st
 
 
-@functools.partial(jax.jit, static_argnames=("spec",))
-def simulate(spec: CloudSpec, trace: Trace,
-             state: CloudState | None = None,
-             t_stop: float | jax.Array = jnp.inf,
-             power_table: PowerStateTable | None = None) -> CloudResult:
-    """Run the cloud to completion (or ``t_stop`` — Timed.simulateUntil)."""
-    if power_table is None:
-        power_table = (PowerStateTable.complex_model() if spec.complex_power
-                       else PowerStateTable.simple())
+def _simulate_impl(spec: CloudSpec, trace: Trace, params: CloudParams,
+                   state: CloudState | None,
+                   t_stop: jax.Array) -> CloudResult:
+    """Single-scenario engine body (trace it once, run it for every
+    parameter point — no python branch below depends on a params value)."""
     lay = spec.layout
     P, V, T = spec.n_pm, spec.n_vm, trace.n
-    st0 = init_state(spec, trace) if state is None else state
+    power_table = params.power
+    st0 = init_state(spec, trace, params) if state is None else state
     # Arrivals at exactly the current clock (e.g. t=0) must be served before
     # the first horizon jump — later arrivals get their scheduler pass inside
     # the loop body because the horizon stops at each arrival time.
-    st0 = _dispatch_loop(spec, trace,
-                         _pm_scheduler(spec, trace, st0, power_table))
+    st0 = _dispatch_loop(spec, params, trace,
+                         _pm_scheduler(spec, params, trace, st0))
     t_stop = jnp.asarray(t_stop, jnp.float32)
     vm_slot = jnp.arange(V)
     hid_slot = jnp.arange(P) + V
@@ -384,7 +508,7 @@ def simulate(spec: CloudSpec, trace: Trace,
 
     def body(st: CloudState):
         ts0, vs0, ps0, fa0 = st.task_state, st.vstage, st.pstate, st.f_active
-        perf = _spreader_perf(spec, st)
+        perf = _spreader_perf(spec, params, st)
         r, live, thresh = _rates(spec, st, perf)
 
         # ---- event horizon --------------------------------------------------
@@ -413,7 +537,7 @@ def simulate(spec: CloudSpec, trace: Trace,
         delivered = jax.ops.segment_sum(jnp.where(live, r, 0.0), st.f_prov,
                                         num_segments=lay.S)
         cpu_del = delivered[lay.cpu0:lay.cpu0 + P]
-        cpu_cap = jnp.maximum(spec.pm_cores * spec.perf_core, 1e-30)
+        cpu_cap = jnp.maximum(params.pm_cores * params.perf_core, 1e-30)
         util = cpu_del / cpu_cap
         power = instantaneous_power(power_table, st.pstate, util)
         x = power * dt
@@ -446,8 +570,8 @@ def simulate(spec: CloudSpec, trace: Trace,
         v_release, v_active = st.f_release[:V], st.f_active[:V]
 
         # image transfer -> startup: flow becomes boot work on the host CPU
-        v_pr = jnp.where(xfer_done, spec.boot_work, v_pr)
-        v_total = jnp.where(xfer_done, spec.boot_work, v_total)
+        v_pr = jnp.where(xfer_done, params.boot_work, v_pr)
+        v_total = jnp.where(xfer_done, params.boot_work, v_total)
         v_prov = jnp.where(xfer_done | boot_done, lay.cpu0 + host, v_prov)
         v_cons = jnp.where(xfer_done | boot_done, lay.vm0 + vm_slot, v_cons)
         v_pl = jnp.where(xfer_done, _BIG, v_pl)
@@ -461,7 +585,7 @@ def simulate(spec: CloudSpec, trace: Trace,
         tcores = trace.cores[tid]
         v_pr = jnp.where(boot_done, twork, v_pr)
         v_total = jnp.where(boot_done, twork, v_total)
-        v_pl = jnp.where(boot_done, tcores * spec.perf_core, v_pl)
+        v_pl = jnp.where(boot_done, tcores * params.perf_core, v_pl)
         v_kind = jnp.where(boot_done, KIND_TASK, v_kind)
         vstage = jnp.where(boot_done, mc.VM_RUNNING, vstage)
 
@@ -469,7 +593,7 @@ def simulate(spec: CloudSpec, trace: Trace,
         new_host = jnp.where(mig_done, st.vm_mig_dst, host)
         v_pr = jnp.where(mig_done, st.vm_saved_pr, v_pr)
         v_total = jnp.where(mig_done, jnp.maximum(st.vm_saved_pr, 1e-9), v_total)
-        v_pl = jnp.where(mig_done, tcores * spec.perf_core, v_pl)
+        v_pl = jnp.where(mig_done, tcores * params.perf_core, v_pl)
         v_kind = jnp.where(mig_done, KIND_TASK, v_kind)
         v_prov = jnp.where(mig_done, lay.cpu0 + new_host, v_prov)
         v_cons = jnp.where(mig_done, lay.vm0 + vm_slot, v_cons)
@@ -522,9 +646,10 @@ def simulate(spec: CloudSpec, trace: Trace,
         pstate = jnp.where(poffend, PM_OFF, pstate)
         pstate_end = jnp.where(ponend | poffend, jnp.inf, pstate_end)
 
-        # sampled meter tick (paper §3.3.2 polling scheme)
+        # sampled meter tick (paper §3.3.2 polling scheme); the period is
+        # data — jnp.isfinite(meter_next) gates metered vs meter-less points
         tick = jnp.isfinite(st.meter_next) & (st.meter_next <= t_new)
-        period = jnp.float32(spec.metering_period)
+        period = jnp.asarray(params.metering_period, jnp.float32)
         energy_sampled = st.energy_sampled + jnp.where(tick, power * period, 0.0)
         meter_next = jnp.where(tick, st.meter_next + period, st.meter_next)
 
@@ -542,8 +667,8 @@ def simulate(spec: CloudSpec, trace: Trace,
         )
 
         # ---- management phase: PM then VM schedulers -------------------------
-        st = _pm_scheduler(spec, trace, st, power_table)
-        st = _dispatch_loop(spec, trace, st)
+        st = _pm_scheduler(spec, params, trace, st)
+        st = _dispatch_loop(spec, params, trace, st)
 
         # ---- termination ------------------------------------------------------
         queued = (st.task_state == TASK_PENDING) & (trace.arrival <= st.t)
@@ -576,8 +701,56 @@ def simulate(spec: CloudSpec, trace: Trace,
 
 
 @functools.partial(jax.jit, static_argnames=("spec",))
-def start_migration(spec: CloudSpec, st: CloudState, v: jax.Array,
-                    dst: jax.Array) -> CloudState:
+def simulate(spec: CloudSpec, trace: Trace,
+             params: CloudParams | None = None,
+             state: CloudState | None = None,
+             t_stop: float | jax.Array = jnp.inf) -> CloudResult:
+    """Run the cloud to completion (or ``t_stop`` — Timed.simulateUntil)."""
+    if params is None:
+        params = CloudParams.for_spec(spec)
+    return _simulate_impl(spec, trace, params, state, t_stop)
+
+
+def _trace_axes(trace: Trace):
+    return jax.tree.map(lambda l: 0 if jnp.ndim(l) > 1 else None, trace)
+
+
+def _params_axes(spec: CloudSpec, params: CloudParams):
+    template = CloudParams.for_spec(spec)
+    return jax.tree.map(
+        lambda l, r: 0 if jnp.ndim(l) > jnp.ndim(r) else None,
+        params, template)
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def simulate_batch(spec: CloudSpec, trace: Trace, params: CloudParams,
+                   t_stop: float | jax.Array = jnp.inf) -> CloudResult:
+    """Batched scenario sweep: one jit, one trace of the engine, ``vmap``
+    over every :class:`Trace` and/or :class:`CloudParams` leaf that carries
+    a leading batch axis (leaves without one broadcast).
+
+    Returns a :class:`CloudResult` whose every leaf has the batch as its
+    leading axis.  Per-point results are numerically identical to the
+    corresponding sequential :func:`simulate` calls.
+    """
+    taxes = _trace_axes(trace)
+    paxes = _params_axes(spec, params)
+    flat_axes = jax.tree.flatten((taxes, paxes),
+                                 is_leaf=lambda x: x is None)[0]
+    if all(a is None for a in flat_axes):
+        raise ValueError(
+            "simulate_batch needs at least one batched leaf (leading batch "
+            "axis) in `trace` or `params`; use simulate() for a single "
+            "scenario")
+    run = jax.vmap(
+        lambda tr, pp: _simulate_impl(spec, tr, pp, None, t_stop),
+        in_axes=(taxes, paxes))
+    return run(trace, params)
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def start_migration(spec: CloudSpec, params: CloudParams, st: CloudState,
+                    v: jax.Array, dst: jax.Array) -> CloudState:
     """Begin live-migrating VM slot ``v`` to PM ``dst`` (paper Fig. 6:
     running -> suspend-transfer/migrating -> resume on the new host).
 
@@ -600,13 +773,13 @@ def start_migration(spec: CloudSpec, st: CloudState, v: jax.Array,
         free_cores=(st.free_cores
                     .at[src].add(jnp.where(ok, st.vm_cores[v], 0.0))
                     .at[dst].add(jnp.where(ok, -st.vm_cores[v], 0.0))),
-        f_pr=w(st.f_pr, spec.vm_mem_mb),
-        f_total=w(st.f_total, spec.vm_mem_mb),
+        f_pr=w(st.f_pr, params.vm_mem_mb),
+        f_total=w(st.f_total, params.vm_mem_mb),
         f_pl=w(st.f_pl, _BIG),
         f_prov=w(st.f_prov, lay.netout0 + src),
         f_cons=w(st.f_cons, lay.netin0 + dst),
         f_active=w(st.f_active, True),
-        f_release=w(st.f_release, st.t + spec.latency_s),
+        f_release=w(st.f_release, st.t + params.latency_s),
         f_kind=w(st.f_kind, KIND_MIGRATE),
         running=jnp.bool_(True),
     )

@@ -37,21 +37,39 @@ def _segment_sum(data: jax.Array, ids: jax.Array, num_segments: int) -> jax.Arra
 # Simple logic: equal split on both endpoints (paper's demo scheduler)
 # ---------------------------------------------------------------------------
 
+def _equal_share_offers(
+    provider: jax.Array,
+    consumer: jax.Array,
+    live: jax.Array,
+    perf: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Per-flow (provider-side, consumer-side) equal-split offered rates:
+    each spreader splits its capacity evenly among its live consumptions.
+    Shared by :func:`equal_share_rates` (horizon mode) and
+    :func:`step_tau` (Eq. 1-2 tau mode) — one code path, same semantics."""
+    S = perf.shape[0]
+    livef = live.astype(jnp.float32)
+    cnt_p = _segment_sum(livef, provider, S)
+    cnt_c = _segment_sum(livef, consumer, S)
+    offer_p = perf[provider] / jnp.maximum(cnt_p[provider], 1.0)
+    offer_c = perf[consumer] / jnp.maximum(cnt_c[consumer], 1.0)
+    return offer_p, offer_c
+
+
 def equal_share_rates(
     provider: jax.Array,
     consumer: jax.Array,
     p_l: jax.Array,
     live: jax.Array,
     perf: jax.Array,
+    *,
+    backend: str = "jnp",   # registry-uniform signature; unused
+    max_iters: int = 0,     # registry-uniform signature; unused
 ) -> jax.Array:
     """rate = min(perf[prov]/n_prov, perf[cons]/n_cons, p_l)."""
-    S = perf.shape[0]
-    livef = live.astype(jnp.float32)
-    cnt_p = _segment_sum(livef, provider, S)
-    cnt_c = _segment_sum(livef, consumer, S)
-    share_p = perf[provider] / jnp.maximum(cnt_p[provider], 1.0)
-    share_c = perf[consumer] / jnp.maximum(cnt_c[consumer], 1.0)
-    r = jnp.minimum(jnp.minimum(share_p, share_c), p_l)
+    del backend, max_iters
+    offer_p, offer_c = _equal_share_offers(provider, consumer, live, perf)
+    r = jnp.minimum(jnp.minimum(offer_p, offer_c), p_l)
     return jnp.where(live, r, 0.0)
 
 
@@ -133,6 +151,11 @@ def maxmin_rates(
     return jnp.where(live, r, 0.0)
 
 
+# Low-level sharing-scheduler registry (paper §3.2.3 pluggable logic).
+# Every entry has the uniform signature
+# ``fn(provider, consumer, p_l, live, perf, *, backend, max_iters)`` so the
+# engine, the standalone sharing loop, and rates_for all select by name
+# through this one table instead of string branches.
 SCHEDULERS: dict[str, Callable] = {
     "equal": equal_share_rates,
     "maxmin": maxmin_rates,
@@ -151,11 +174,8 @@ def rates_for(
     from .arrays import live_mask
 
     live = live_mask(cons, t)
-    if scheduler == "maxmin":
-        r = maxmin_rates(cons.provider, cons.consumer, cons.p_l, live, perf,
-                         backend=backend)
-    else:
-        r = equal_share_rates(cons.provider, cons.consumer, cons.p_l, live, perf)
+    r = SCHEDULERS[scheduler](cons.provider, cons.consumer, cons.p_l, live,
+                              perf, backend=backend)
     return r, live
 
 
@@ -193,12 +213,8 @@ def step_tau(
         rate = maxmin_rates(cons.provider, cons.consumer, cons.p_l, live, perf)
         offer_p = offer_c = rate
     else:
-        S = perf.shape[0]
-        livef = live.astype(jnp.float32)
-        cnt_p = _segment_sum(livef, cons.provider, S)
-        cnt_c = _segment_sum(livef, cons.consumer, S)
-        offer_p = perf[cons.provider] / jnp.maximum(cnt_p[cons.provider], 1.0)
-        offer_c = perf[cons.consumer] / jnp.maximum(cnt_c[cons.consumer], 1.0)
+        offer_p, offer_c = _equal_share_offers(cons.provider, cons.consumer,
+                                               live, perf)
 
     moved = jnp.minimum(cons.p_r, jnp.minimum(offer_p, cons.p_l) * tau)
     moved = jnp.where(live, moved, 0.0)

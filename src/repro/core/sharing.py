@@ -20,7 +20,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .fairshare import equal_share_rates, maxmin_rates
+from .fairshare import SCHEDULERS
 
 _BIG = jnp.float32(3.0e38)
 
@@ -94,15 +94,12 @@ def run_sharing(
     thresh = 1e-6 * prob.amount + 1e-9
     exists = prob.amount > 0.0
 
+    rate_fn = SCHEDULERS[scheduler]
+
     def rates_of(p_r, t):
         live = exists & (p_r > thresh) & (t >= prob.t_start)
-        if scheduler == "maxmin":
-            r = maxmin_rates(prob.provider, prob.consumer, prob.limit, live,
-                             prob.perf, backend=backend,
-                             max_iters=max_fill_iters)
-        else:
-            r = equal_share_rates(prob.provider, prob.consumer, prob.limit,
-                                  live, prob.perf)
+        r = rate_fn(prob.provider, prob.consumer, prob.limit, live,
+                    prob.perf, backend=backend, max_iters=max_fill_iters)
         return r, live
 
     class _St(NamedTuple):

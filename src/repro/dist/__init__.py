@@ -1,0 +1,2 @@
+# Distribution utilities: logical-axis sharding rules (sharding.py) and
+# pipeline parallelism (pipeline.py).

@@ -1,0 +1,176 @@
+"""Logical-axis sharding rules: named tensor dims -> mesh axes.
+
+Model code annotates tensors with *logical* axis names (``batch``,
+``embed``, ``mlp``, ``kv_heads``, ``cache_seq`` ...); this module resolves
+them against a mesh through a *rule set* — an ordered preference list of
+mesh axes per logical name.  Resolution is greedy and safe:
+
+* a mesh axis is never used twice within one tensor's spec;
+* an axis is only taken when it (cumulatively) divides the dimension —
+  indivisible dims fall back to replication instead of erroring;
+* size-1 mesh axes are skipped (they would shard nothing);
+* *fallback* names (``cache_seq``) are resolved after all other dims, so
+  they only pick up mesh axes the primary dims left free.
+
+Two rule sets ship: :data:`TRAIN_RULES` (FSDP over ``data`` + TP over
+``model``) and :data:`SERVE_RULES` (weights replicated over ``data``, TP
+over ``model``, long-context KV-cache sequence sharding).  Activations are
+constrained in-model via :func:`constrain`, which resolves against the
+ambient mesh/rules installed by :func:`act_ctx` (a no-op outside it, so
+pure-CPU unit tests run unsharded).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# Logical name -> ordered mesh-axis preferences.
+TRAIN_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "embed": ("data",),          # FSDP: shard params over the data axis
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "q_heads": ("model",),
+    "kv_heads": ("model",),
+    "head": (),
+    "seq": (),
+    "cache_seq": (),
+}
+
+SERVE_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "embed": (),                 # no FSDP at serve time: weights stay local
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "q_heads": ("model",),
+    "kv_heads": ("model",),
+    "head": (),
+    "seq": (),
+    # long-context decode: the KV cache's sequence dim takes whatever the
+    # batch/head dims left free (model first, then data)
+    "cache_seq": ("model", "data"),
+}
+
+RULE_SETS: dict[str, dict[str, tuple[str, ...]]] = {
+    "train": TRAIN_RULES,
+    "serve": SERVE_RULES,
+}
+
+# Names resolved after all others (they scavenge leftover mesh axes).
+_FALLBACK_NAMES = frozenset({"cache_seq"})
+
+
+def _take_axes(name: str | None, dim: int, mesh_shape: Mapping[str, int],
+               rules: Mapping[str, Sequence[str]], used: set[str]):
+    """Greedy prefix of the rule's mesh axes that divides ``dim`` evenly."""
+    taken: list[str] = []
+    prod = 1
+    for ax in rules.get(name, ()) if name is not None else ():
+        size = mesh_shape.get(ax, 1)
+        if size <= 1 or ax in used:
+            continue
+        if dim % (prod * size) != 0:
+            continue
+        taken.append(ax)
+        used.add(ax)
+        prod *= size
+    return taken
+
+
+def pspec_for(names: Sequence[str | None], shape: Sequence[int],
+              mesh, rules: Mapping[str, Sequence[str]]) -> P:
+    """PartitionSpec for a tensor with logical axis ``names`` and ``shape``.
+
+    ``mesh`` may be a concrete ``Mesh`` or an ``AbstractMesh``; only its
+    ``shape`` mapping is consulted.
+    """
+    mesh_shape = dict(mesh.shape)
+    used: set[str] = set()
+    parts: list[Any] = [None] * len(names)
+
+    def resolve(i: int):
+        taken = _take_axes(names[i], int(shape[i]), mesh_shape, rules, used)
+        if len(taken) == 1:
+            parts[i] = taken[0]
+        elif taken:
+            parts[i] = tuple(taken)
+
+    primary = [i for i, n in enumerate(names) if n not in _FALLBACK_NAMES]
+    fallback = [i for i, n in enumerate(names) if n in _FALLBACK_NAMES]
+    for i in primary:
+        resolve(i)
+    for i in fallback:
+        resolve(i)
+    return P(*parts)
+
+
+def _is_axes_leaf(x) -> bool:
+    return x is None or (isinstance(x, tuple)
+                         and all(isinstance(e, str) or e is None for e in x))
+
+
+def tree_shardings(axes_tree, abstract_tree, mesh,
+                   rules: Mapping[str, Sequence[str]]):
+    """Map a tree of logical-axes tuples + matching abstract values to
+    :class:`NamedSharding` leaves."""
+    return jax.tree.map(
+        lambda axes, leaf: NamedSharding(
+            mesh, pspec_for(axes if axes is not None else (None,) * leaf.ndim,
+                            leaf.shape, mesh, rules)),
+        axes_tree, abstract_tree, is_leaf=_is_axes_leaf)
+
+
+def batch_axes(batch_tree):
+    """Logical axes for a data batch: leading ``batch`` dim, rest unsharded."""
+    return jax.tree.map(
+        lambda leaf: ("batch",) + (None,) * (leaf.ndim - 1), batch_tree)
+
+
+def replicated(mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+# --- activation constraints ------------------------------------------------
+
+_ctx = threading.local()
+
+
+@contextlib.contextmanager
+def act_ctx(mesh, rules: Mapping[str, Sequence[str]]):
+    """Install the ambient (mesh, rules) used by :func:`constrain`."""
+    prev = getattr(_ctx, "current", None)
+    _ctx.current = (mesh, rules)
+    try:
+        yield
+    finally:
+        _ctx.current = prev
+
+
+def constrain(x: jax.Array, names: Sequence[str | None]) -> jax.Array:
+    """Constrain an activation's sharding by logical axis names.
+
+    Inside an :func:`act_ctx` this lowers to
+    ``jax.lax.with_sharding_constraint``; outside it is the identity, so
+    model code is unconditional and single-device tests stay mesh-free.
+
+    .. warning:: The ambient context is read at **trace** time and is not
+       part of jax's jit cache key.  A jitted function must be traced
+       (first called, or explicitly ``.lower()``-ed) *inside* the
+       ``act_ctx`` whose constraints it should carry — a trace cached
+       outside the context has the identity baked in and will silently
+       skip constraints on later in-context calls with the same shapes
+       (and vice versa).  ``repro.launch.train`` / ``dryrun`` therefore
+       lower inside ``with shd.act_ctx(...)``; do the same.
+    """
+    current = getattr(_ctx, "current", None)
+    if current is None:
+        return x
+    mesh, rules = current
+    spec = pspec_for(names, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -36,11 +36,13 @@ def _kernel(a_ref, x_ref, h0_ref, y_ref, hlast_ref, h_scr, *,
         h_scr[...] = h0_ref[...].astype(jnp.float32)
 
     def step(t, h):  # h: (1, BD) f32
-        a_t = pl.load(a_ref, (0, pl.ds(t, 1), slice(None))).astype(jnp.float32)
-        x_t = pl.load(x_ref, (0, pl.ds(t, 1), slice(None))).astype(jnp.float32)
+        # all-Slice index tuples: bare int dims break interpret-mode
+        # discharge on older jax (0.4.x)
+        idx = (pl.ds(0, 1), pl.ds(t, 1), slice(None))
+        a_t = pl.load(a_ref, idx)[0].astype(jnp.float32)
+        x_t = pl.load(x_ref, idx)[0].astype(jnp.float32)
         h = a_t * h + x_t
-        pl.store(y_ref, (0, pl.ds(t, 1), slice(None)),
-                 h.astype(y_ref.dtype))
+        pl.store(y_ref, idx, h[None].astype(y_ref.dtype))
         return h
 
     h = jax.lax.fori_loop(0, bt, step, h_scr[...])

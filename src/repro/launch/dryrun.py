@@ -231,6 +231,8 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, *,
     rec["compile_s"] = round(time.time() - t0, 2)
 
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # jax<=0.4.x: one dict per device kind
+        ca = ca[0] if ca else {}
     rec["cost_analysis"] = {k: float(v) for k, v in ca.items()
                             if isinstance(v, (int, float))
                             and k in ("flops", "bytes accessed",

@@ -1,0 +1,115 @@
+"""Deterministic fallback for the ``hypothesis`` API surface these tests use.
+
+The test-suite's property tests only need ``given``/``settings`` and the
+``integers`` / ``lists`` / ``sampled_from`` / ``data`` strategies.  When the
+real hypothesis package is unavailable (offline CI image), ``install()``
+registers this module as ``hypothesis`` so the suite still runs each
+property over a fixed, seed-derived sample of examples — weaker than real
+shrinking/coverage, but the properties are exercised instead of erroring at
+collection.  When hypothesis is importable, this module is never installed.
+"""
+from __future__ import annotations
+
+import sys
+import types
+
+import numpy as np
+
+
+class Strategy:
+    def __init__(self, sample):
+        self._sample = sample  # rng -> value
+
+    def map(self, fn):
+        return Strategy(lambda rng: fn(self._sample(rng)))
+
+    def filter(self, pred, _tries: int = 100):
+        def sample(rng):
+            for _ in range(_tries):
+                v = self._sample(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate never satisfied")
+        return Strategy(sample)
+
+
+def integers(min_value: int = 0, max_value: int = 2**31 - 1) -> Strategy:
+    return Strategy(lambda rng: int(rng.randint(min_value, max_value + 1)))
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0, **_kw) -> Strategy:
+    return Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def booleans() -> Strategy:
+    return Strategy(lambda rng: bool(rng.randint(0, 2)))
+
+
+def sampled_from(elements) -> Strategy:
+    pool = list(elements)
+    return Strategy(lambda rng: pool[rng.randint(len(pool))])
+
+
+def lists(elements: Strategy, min_size: int = 0, max_size: int = 10,
+          **_kw) -> Strategy:
+    return Strategy(lambda rng: [
+        elements._sample(rng)
+        for _ in range(rng.randint(min_size, max_size + 1))])
+
+
+class _DataProxy:
+    def __init__(self, rng):
+        self._rng = rng
+
+    def draw(self, strategy: Strategy, label=None):
+        return strategy._sample(self._rng)
+
+
+def data() -> Strategy:
+    return Strategy(lambda rng: _DataProxy(rng))
+
+
+def settings(max_examples: int = 20, deadline=None, **_kw):
+    def deco(fn):
+        fn._fallback_settings = {"max_examples": max_examples}
+        return fn
+    return deco
+
+
+def given(*arg_strategies: Strategy, **kw_strategies: Strategy):
+    def deco(fn):
+        def runner(*args, **kwargs):
+            n = runner._fallback_settings.get("max_examples", 20)
+            for i in range(n):
+                rng = np.random.RandomState(0x9E3779B1 ^ (i * 7919 + 13))
+                drawn = [s._sample(rng) for s in arg_strategies]
+                drawn_kw = {k: s._sample(rng)
+                            for k, s in kw_strategies.items()}
+                fn(*args, *drawn, **kwargs, **drawn_kw)
+
+        # @settings may sit above @given: it then writes to `runner`;
+        # seed the dict here so either decorator order works.
+        runner._fallback_settings = dict(
+            getattr(fn, "_fallback_settings", {}))
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        # NOTE: no functools.wraps — pytest must see the zero-arg signature,
+        # not the property's drawn parameters (they are not fixtures).
+        return runner
+    return deco
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` (plus ``strategies``)."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    strategies = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from", "lists",
+                 "data"):
+        setattr(strategies, name, globals()[name])
+    mod.strategies = strategies
+    mod.__is_repro_fallback__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies

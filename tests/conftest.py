@@ -1,0 +1,12 @@
+"""Test bootstrap: prefer the real hypothesis, fall back to the
+deterministic local shim when it is not installed (offline image)."""
+import pathlib
+import sys
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+    from _hypothesis_fallback import install
+
+    install()

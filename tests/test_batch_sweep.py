@@ -1,0 +1,171 @@
+"""Batched scenario sweeps: simulate_batch equivalence + compile behavior.
+
+The static/dynamic config split exists so that (a) changing any continuous
+parameter (or the VM/PM scheduler code) does NOT retrace the engine, and
+(b) a whole parameter sweep runs as one vmapped program whose per-point
+results match sequential single-scenario calls exactly.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine as eng
+from repro.core.trace import synthetic_trace
+
+
+def _cloud(**kw):
+    base = dict(n_pm=2, n_vm=16, pm_cores=4.0, net_bw=100.0, repo_bw=200.0,
+                image_mb=100.0, boot_work=4.0, latency_s=0.0)
+    base.update(kw)
+    return eng.make_cloud(**base)
+
+
+def _trace(arrival, cores, runtime):
+    arrival = jnp.asarray(arrival, jnp.float32)
+    cores = jnp.asarray(cores, jnp.float32)
+    runtime = jnp.asarray(runtime, jnp.float32)
+    return eng.Trace(arrival=arrival, cores=cores, work=runtime * cores)
+
+
+def _spy_impl(monkeypatch):
+    """Count python-level traces of the engine body."""
+    calls = []
+    orig = eng._simulate_impl
+
+    def spy(*args, **kwargs):
+        calls.append(1)
+        return orig(*args, **kwargs)
+
+    monkeypatch.setattr(eng, "_simulate_impl", spy)
+    return calls
+
+
+def _param_points(params, n):
+    """n parameter points varying several continuous knobs at once."""
+    pts = []
+    for i in range(n):
+        pts.append(dataclasses.replace(
+            params,
+            net_bw=jnp.float32(50.0 + 25.0 * i),
+            boot_work=jnp.float32(2.0 + i),
+            image_mb=jnp.float32(50.0 + 25.0 * i),
+            # point 0 is meter-less (period 0 -> inf tick): the isfinite
+            # masking must keep it equivalent inside a metered batch
+            metering_period=jnp.float32(0.0 if i == 0 else 0.5 * i),
+        ))
+    return pts
+
+
+def test_batched_matches_sequential_params_sweep():
+    """simulate_batch over 4 CloudParams points == 4 simulate calls, on
+    completion times, energy, sampled energy, and event counts."""
+    spec, params = _cloud(n_pm=2, n_vm=8)
+    tr = _trace([0.0, 1.0, 2.0, 3.0, 8.0], [1.0, 2.0, 4.0, 1.0, 2.0],
+                [10.0, 7.0, 3.0, 12.0, 5.0])
+    pts = _param_points(params, 4)
+    batched = eng.simulate_batch(spec, tr, eng.stack_params(pts))
+    for i, pt in enumerate(pts):
+        single = eng.simulate(spec, tr, params=pt)
+        np.testing.assert_allclose(np.asarray(batched.completion[i]),
+                                   np.asarray(single.completion),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(batched.energy[i]),
+                                   np.asarray(single.energy),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(batched.energy_sampled[i]),
+                                   np.asarray(single.energy_sampled),
+                                   rtol=1e-6, atol=1e-6)
+        assert int(batched.n_events[i]) == int(single.n_events)
+
+
+def test_batched_matches_sequential_scheduler_matrix():
+    """The VM x PM scheduler matrix is CloudParams data: one batch, same
+    results as per-cell sequential runs."""
+    spec, params = _cloud(n_pm=1, n_vm=8)
+    tr = _trace([0.0, 0.0, 0.5], [4.0, 4.0, 1.0], [10.0, 10.0, 2.0])
+    combos = [(v, p) for v in eng.VM_SCHEDULERS for p in eng.PM_SCHEDULERS]
+    pts = [dataclasses.replace(params, vm_sched=v, pm_sched=p)
+           for v, p in combos]
+    batched = eng.simulate_batch(spec, tr, eng.stack_params(pts))
+    assert batched.completion.shape[0] == len(combos)
+    for i, pt in enumerate(pts):
+        single = eng.simulate(spec, tr, params=pt)
+        np.testing.assert_allclose(np.asarray(batched.completion[i]),
+                                   np.asarray(single.completion),
+                                   rtol=1e-6, atol=1e-6)
+        assert (np.asarray(batched.rejected[i])
+                == np.asarray(single.rejected)).all()
+
+
+def test_batched_traces():
+    """Batching over stacked traces (params unbatched) also matches."""
+    spec, params = _cloud(n_pm=1, n_vm=32)
+    traces = [synthetic_trace(24, parallel=6, seed=s) for s in (0, 1, 2)]
+    batched = eng.simulate_batch(spec, eng.stack_traces(traces), params)
+    for i, tr in enumerate(traces):
+        single = eng.simulate(spec, tr, params=params)
+        np.testing.assert_allclose(np.asarray(batched.completion[i]),
+                                   np.asarray(single.completion),
+                                   rtol=1e-6, atol=1e-6)
+        assert int(batched.n_events[i]) == int(single.n_events)
+
+
+def test_simulate_no_recompile_across_params(monkeypatch):
+    """Two different CloudParams values share one trace of the engine body
+    (params are traced data, not static), and the values demonstrably flow
+    through (different bandwidths -> different completions)."""
+    jax.clear_caches()
+    calls = _spy_impl(monkeypatch)
+    spec, params = _cloud(n_pm=1, n_vm=4)
+    tr = _trace([0.0, 0.0, 1.0], [1.0, 1.0, 2.0], [5.0, 6.0, 7.0])
+    p1 = dataclasses.replace(params, net_bw=jnp.float32(100.0))
+    p2 = dataclasses.replace(params, net_bw=jnp.float32(20.0))
+    r1 = eng.simulate(spec, tr, params=p1)
+    r2 = eng.simulate(spec, tr, params=p2)
+    assert len(calls) == 1, "second params point must reuse the compiled sim"
+    assert float(r2.completion[0]) > float(r1.completion[0])
+
+
+def test_simulate_batch_8_point_sweep_compiles_once(monkeypatch):
+    """An 8-point CloudParams sweep traces the engine exactly once and its
+    per-point results are numerically identical to sequential calls."""
+    jax.clear_caches()
+    calls = _spy_impl(monkeypatch)
+    spec, params = _cloud(n_pm=2, n_vm=6)
+    tr = _trace([0.0, 0.5, 1.0, 1.5], [1.0, 2.0, 1.0, 4.0],
+                [4.0, 6.0, 8.0, 3.0])
+    pts = _param_points(params, 8)
+    batched = eng.simulate_batch(spec, tr, eng.stack_params(pts))
+    assert len(calls) == 1, "8-point sweep must trace the engine body once"
+    assert batched.completion.shape == (8, tr.n)
+    for i, pt in enumerate(pts):
+        single = eng.simulate(spec, tr, params=pt)
+        np.testing.assert_allclose(np.asarray(batched.completion[i]),
+                                   np.asarray(single.completion),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(batched.energy[i]),
+                                   np.asarray(single.energy),
+                                   rtol=1e-6, atol=1e-6)
+        assert int(batched.n_events[i]) == int(single.n_events)
+
+
+def test_simulate_batch_rejects_unbatched_input():
+    spec, params = _cloud()
+    tr = _trace([0.0], [1.0], [1.0])
+    with pytest.raises(ValueError, match="batched leaf"):
+        eng.simulate_batch(spec, tr, params)
+
+
+def test_make_cloud_routes_and_validates():
+    spec, params = _cloud(max_events=123, metering_period=2.0,
+                          vm_sched="smallestfirst")
+    assert spec.max_events == 123
+    assert float(jnp.asarray(params.metering_period)) == 2.0
+    assert int(params.vm_sched) == eng.VM_SMALLESTFIRST
+    with pytest.raises(TypeError, match="unknown cloud option"):
+        eng.make_cloud(not_a_knob=1)
+    with pytest.raises(ValueError, match="unknown scheduler"):
+        eng.CloudParams(vm_sched="bogus")

@@ -12,11 +12,12 @@ from repro.core.cloud import cloud_info, deregister_pm
 from repro.core.trace import filter_fitting, gwa_like_trace, synthetic_trace
 
 
-def _spec(**kw):
+def _cloud(**kw):
+    """(CloudSpec, CloudParams) with the suite's small-cluster defaults."""
     base = dict(n_pm=2, n_vm=16, pm_cores=4.0, net_bw=100.0, repo_bw=200.0,
                 image_mb=100.0, boot_work=4.0, latency_s=0.0)
     base.update(kw)
-    return eng.CloudSpec(**base)
+    return eng.make_cloud(**base)
 
 
 def _trace(arrival, cores, runtime):
@@ -29,9 +30,9 @@ def _trace(arrival, cores, runtime):
 def test_single_task_lifecycle():
     """arrival 0 -> transfer 100MB@100MB/s = 1s -> boot 4 core-s through the
     1-core VM spreader = 4s -> task 10s on 1 core -> completion at 15s."""
-    spec = _spec()
+    spec, params = _cloud()
     tr = _trace([0.0], [1.0], [10.0])
-    res = eng.simulate(spec, tr)
+    res = eng.simulate(spec, tr, params=params)
     assert not bool(res.overflow)
     np.testing.assert_allclose(float(res.completion[0]), 15.0, rtol=1e-5)
     assert int(res.state.task_state[0]) == eng.TASK_DONE
@@ -42,23 +43,23 @@ def test_parallel_tasks_two_waves():
     a time -> two identical waves.  Wave timeline: 4 transfers share the
     100 MB/s NIC (4s), 4 boots of 4 core-s through 1-core VM spreaders (4s),
     tasks 10s -> 18s; second wave lands at 36s."""
-    spec = _spec(n_pm=1)
+    spec, params = _cloud(n_pm=1)
     tr = _trace([0.0] * 8, [1.0] * 8, [10.0] * 8)
-    res = eng.simulate(spec, tr)
+    res = eng.simulate(spec, tr, params=params)
     comp = np.sort(np.asarray(res.completion))
     np.testing.assert_allclose(comp[:4], 18.0, rtol=1e-4)
     np.testing.assert_allclose(comp[4:], 36.0, rtol=1e-4)
 
 
 def test_engine_matches_pydes_oracle():
-    spec = _spec(n_pm=2, pm_cores=4.0)
+    spec, params = _cloud(n_pm=2, pm_cores=4.0)
     rng = np.random.RandomState(3)
     n = 24
     arrival = np.sort(rng.uniform(0, 30, n)).astype(np.float32)
     cores = rng.choice([1.0, 2.0, 4.0], n, p=[0.6, 0.3, 0.1]).astype(np.float32)
     runtime = rng.uniform(5, 40, n).astype(np.float32)
     tr = _trace(arrival, cores, runtime)
-    res = eng.simulate(spec, tr)
+    res = eng.simulate(spec, tr, params=params)
     oracle = PyDESCloud(n_pm=2, pm_cores=4.0, net_bw=100.0, repo_bw=200.0,
                         image_mb=100.0, boot_work=4.0).run(
         arrival, cores, runtime * cores)
@@ -79,8 +80,8 @@ def test_engine_vs_oracle_property(seed):
     arrival = np.sort(rng.uniform(0, 20, n)).astype(np.float32)
     cores = rng.choice([1.0, 2.0], n).astype(np.float32)
     runtime = rng.uniform(2, 25, n).astype(np.float32)
-    spec = _spec(n_pm=n_pm, n_vm=32)
-    res = eng.simulate(spec, _trace(arrival, cores, runtime))
+    spec, params = _cloud(n_pm=n_pm, n_vm=32)
+    res = eng.simulate(spec, _trace(arrival, cores, runtime), params=params)
     oracle = PyDESCloud(n_pm=n_pm, pm_cores=4.0, net_bw=100.0, repo_bw=200.0,
                         image_mb=100.0, boot_work=4.0).run(
         arrival, cores, runtime * cores)
@@ -90,9 +91,9 @@ def test_engine_vs_oracle_property(seed):
 
 def test_first_fit_queues_when_full():
     """2 tasks need 4 cores each; 1 PM with 4 cores -> strictly serial."""
-    spec = _spec(n_pm=1)
+    spec, params = _cloud(n_pm=1)
     tr = _trace([0.0, 0.0], [4.0, 4.0], [10.0, 10.0])
-    res = eng.simulate(spec, tr)
+    res = eng.simulate(spec, tr, params=params)
     comp = np.sort(np.asarray(res.completion))
     # first: 1s xfer + 1s boot + 10s = 12; second starts after first done
     np.testing.assert_allclose(comp[0], 12.0, rtol=1e-4)
@@ -100,9 +101,9 @@ def test_first_fit_queues_when_full():
 
 
 def test_nonqueuing_rejects():
-    spec = _spec(n_pm=1, vm_sched="nonqueuing")
+    spec, params = _cloud(n_pm=1, vm_sched="nonqueuing")
     tr = _trace([0.0, 0.0], [4.0, 4.0], [10.0, 10.0])
-    res = eng.simulate(spec, tr)
+    res = eng.simulate(spec, tr, params=params)
     rej = np.asarray(res.rejected)
     assert rej.sum() == 1
     comp = np.asarray(res.completion)
@@ -112,8 +113,10 @@ def test_nonqueuing_rejects():
 def test_smallest_first_ordering():
     """Big head task blocks FF; smallest-first lets the small one pass."""
     tr = _trace([0.0, 0.1, 0.2], [4.0, 4.0, 1.0], [10.0, 10.0, 1.0])
-    res_ff = eng.simulate(_spec(n_pm=1), tr)
-    res_sf = eng.simulate(_spec(n_pm=1, vm_sched="smallestfirst"), tr)
+    spec_ff, params_ff = _cloud(n_pm=1)
+    spec_sf, params_sf = _cloud(n_pm=1, vm_sched="smallestfirst")
+    res_ff = eng.simulate(spec_ff, tr, params=params_ff)
+    res_sf = eng.simulate(spec_sf, tr, params=params_sf)
     # under FF the 1-core task waits behind the second 4-core task
     assert float(res_ff.completion[2]) > float(res_ff.completion[0])
     # under SF it is dispatched while the first 4-core task has no room...
@@ -123,32 +126,36 @@ def test_smallest_first_ordering():
 
 
 def test_oversize_task_rejected_not_stuck():
-    spec = _spec(n_pm=1)
+    spec, params = _cloud(n_pm=1)
     tr = _trace([0.0, 1.0], [8.0, 1.0], [5.0, 5.0])  # 8 > 4 cores
-    res = eng.simulate(spec, tr)
+    res = eng.simulate(spec, tr, params=params)
     assert bool(res.rejected[0])
     assert np.isfinite(float(res.completion[1]))
 
 
 def test_ondemand_pm_scheduler_wakes_and_sleeps():
-    spec = _spec(n_pm=2, pm_sched="ondemand")
+    spec, params = _cloud(n_pm=2, pm_sched="ondemand")
     tr = _trace([0.0], [1.0], [10.0])
-    res = eng.simulate(spec, tr)
+    res = eng.simulate(spec, tr, params=params)
     # boot penalty: 200s switch-on before the VM can even transfer
     assert float(res.completion[0]) > 200.0
     # afterwards everything idles off
     assert (np.asarray(res.state.pstate) == eng.PM_OFF).all()
-    # energy: cheaper than keeping both running the whole time
-    always = eng.simulate(_spec(n_pm=2), tr)
+    # energy: cheaper than keeping both running for the same span
     t_end = float(res.t_end)
     assert float(res.energy.sum()) < 368.8 * 2 * t_end
+    # ...and the always-on baseline really does idle-burn both PMs
+    spec_a, params_a = _cloud(n_pm=2)
+    always = eng.simulate(spec_a, tr, params=params_a)
+    assert (float(always.energy.sum())
+            >= 368.8 * 2 * float(always.t_end) * 0.99)
 
 
 def test_energy_integration_vs_hand():
     """One 4-core task on an idle PM: P = idle + util*(max-min)."""
-    spec = _spec(n_pm=1)
+    spec, params = _cloud(n_pm=1)
     tr = _trace([0.0], [4.0], [10.0])
-    res = eng.simulate(spec, tr)
+    res = eng.simulate(spec, tr, params=params)
     # phases: 1s transfer (util 0), 1s boot (util 1.0: 4 core-s at 4 cores),
     # 10 s task at util 1.0; power numbers from Table 1
     e = float(res.energy[0])
@@ -157,9 +164,9 @@ def test_energy_integration_vs_hand():
 
 
 def test_sampled_metering_close_to_integrated():
-    spec = _spec(n_pm=1, metering_period=0.25)
+    spec, params = _cloud(n_pm=1, metering_period=0.25)
     tr = _trace([0.0, 0.5], [1.0, 2.0], [10.0, 7.0])
-    res = eng.simulate(spec, tr)
+    res = eng.simulate(spec, tr, params=params)
     e_int = float(res.energy[0])
     e_smp = float(res.energy_sampled[0])
     # sampling quantises state changes to 0.25 s -> small relative error
@@ -167,16 +174,16 @@ def test_sampled_metering_close_to_integrated():
 
 
 def test_migration_moves_vm_and_completes():
-    spec = _spec(n_pm=2)
+    spec, params = _cloud(n_pm=2)
     tr = _trace([0.0], [2.0], [50.0])
     # run until the task is well underway
-    res1 = eng.simulate(spec, tr, t_stop=10.0)
+    res1 = eng.simulate(spec, tr, params=params, t_stop=10.0)
     st = res1.state
     assert int(st.vstage[0]) == mc.VM_RUNNING
     assert int(st.vm_host[0]) == 0
-    st = eng.start_migration(spec, st, 0, 1)
+    st = eng.start_migration(spec, params, st, 0, 1)
     assert int(st.vstage[0]) == mc.VM_MIGRATING
-    res2 = eng.simulate(spec, tr, state=st)
+    res2 = eng.simulate(spec, tr, params=params, state=st)
     assert int(res2.state.task_state[0]) == eng.TASK_DONE
     # migration transferred 1024MB over 100MB/s -> ~10.24s pause
     assert float(res2.completion[0]) > 52.0 + 10.0
@@ -185,33 +192,33 @@ def test_migration_moves_vm_and_completes():
 
 
 def test_allocation_expiry_returns_cores():
-    spec = _spec(n_pm=1)
+    spec, params = _cloud(n_pm=1)
     tr = _trace([100.0], [1.0], [1.0])  # keep sim alive past expiry
-    st = eng.init_state(spec, tr)
+    st = eng.init_state(spec, tr, params)
     st, v = eng.make_allocation(spec, st, 0, 2.0, 5.0)
     assert int(v) == 0
     assert float(st.free_cores[0]) == 2.0
-    res = eng.simulate(spec, tr, state=st)
+    res = eng.simulate(spec, tr, params=params, state=st)
     # allocation expired at t=5 -> cores back; task later used the PM fine
     assert float(res.state.free_cores[0]) == 4.0
     assert int(res.state.task_state[0]) == eng.TASK_DONE
 
 
 def test_deregister_pm_requeues_tasks():
-    spec = _spec(n_pm=2)
+    spec, params = _cloud(n_pm=2)
     tr = _trace([0.0, 0.0], [4.0, 4.0], [30.0, 30.0])
-    res1 = eng.simulate(spec, tr, t_stop=10.0)
-    st = deregister_pm(spec, res1.state, 0, tr)
-    res2 = eng.simulate(spec, tr, state=st)
+    res1 = eng.simulate(spec, tr, params=params, t_stop=10.0)
+    st = deregister_pm(spec, params, res1.state, 0, tr)
+    res2 = eng.simulate(spec, tr, params=params, state=st)
     # both tasks finish eventually (one had to restart from scratch on PM 1)
     assert (np.asarray(res2.state.task_state) == eng.TASK_DONE).all()
 
 
 def test_cloud_info_api():
-    spec = _spec(n_pm=2)
+    spec, params = _cloud(n_pm=2)
     tr = _trace([0.0, 0.0, 0.0], [4.0, 4.0, 4.0], [10.0, 10.0, 10.0])
-    res = eng.simulate(spec, tr, t_stop=5.0)
-    info = cloud_info(spec, res.state, tr)
+    res = eng.simulate(spec, tr, params=params, t_stop=5.0)
+    info = cloud_info(spec, params, res.state, tr)
     assert info["pm_total"] == 2 and info["pm_running"] == 2
     assert info["vm_hosted"] == 2        # third waits: both PMs full
     assert info["queue_len"] == 1
@@ -220,10 +227,10 @@ def test_cloud_info_api():
 
 
 def test_complex_power_model_transitions():
-    spec = _spec(n_pm=1, pm_sched="ondemand", complex_power=True,
-                 hidden_work_on=8.0, hidden_work_off=0.8)
+    spec, params = _cloud(n_pm=1, pm_sched="ondemand", complex_power=True,
+                          hidden_work_on=8.0, hidden_work_off=0.8)
     tr = _trace([0.0], [1.0], [5.0])
-    res = eng.simulate(spec, tr)
+    res = eng.simulate(spec, tr, params=params)
     assert int(res.state.task_state[0]) == eng.TASK_DONE
     # hidden consumer: 8 core-s at p_l=0.8 cores -> 10s switching-on
     assert float(res.completion[0]) >= 10.0

@@ -11,8 +11,18 @@ from jax.sharding import AbstractMesh, PartitionSpec as P
 
 from repro.dist import sharding as shd
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-POD_MESH = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+def _amesh(sizes, names):
+    """AbstractMesh across jax versions (>=0.5: (sizes, names);
+    0.4.x: tuple of (name, size) pairs)."""
+    try:
+        return AbstractMesh(sizes, names)
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, sizes)))
+
+
+MESH = _amesh((16, 16), ("data", "model"))
+POD_MESH = _amesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def test_basic_tp_fsdp():
