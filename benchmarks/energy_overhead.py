@@ -51,6 +51,7 @@ def run(quick=True) -> list[dict]:
     jax.block_until_ready(res.t_end)
     sweep_wall = time.time() - t0
 
+    readings = res.readings(spec)
     rows = []
     for i, period in enumerate(periods):
         exact = float(np.asarray(res.energy[i]).sum())
@@ -65,6 +66,10 @@ def run(quick=True) -> list[dict]:
             "sampled_energy_mj": round(sampled / 1e6, 3),
             "sampled_rel_err": (abs(sampled - exact) / exact
                                 if period > 0 else 0.0),
+            # hierarchical meter stack riding the same run
+            "vm_attributed_mj": round(
+                float(np.asarray(readings["vm"][i]).sum()) / 1e6, 3),
+            "hvac_mj": round(float(readings["hvac"][i]) / 1e6, 3),
         })
     rows.append({
         "name": "fig16_sweep_cost",

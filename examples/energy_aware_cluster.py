@@ -34,11 +34,16 @@ trace = ea.job_trace(jobs, cells, arrival_spread_s=3600.0, seed=2)
 print(f"\nfleet: {trace.n} jobs over 8 pods "
       f"({ea.POD_CHIPS} chips each)\n")
 rows = ea.evaluate_schedulers(trace, n_pods=8)
-print(f"{'VM sched':>14s} {'PM sched':>9s} {'energy kWh':>11s} "
-      f"{'makespan h':>11s} {'mean wait h':>12s}")
+# meter-stack columns: IT energy (whole-IaaS aggregate), the job-attributed
+# share (per-VM Eq. 6 meters), idle waste, and HVAC (indirect meter)
+print(f"{'VM sched':>14s} {'PM sched':>9s} {'IT kWh':>9s} {'job kWh':>9s} "
+      f"{'idle kWh':>9s} {'HVAC kWh':>9s} {'makespan h':>11s} "
+      f"{'mean wait h':>12s}")
 for r in rows:
     print(f"{r['vm_sched']:>14s} {r['pm_sched']:>9s} "
-          f"{r['energy_kwh']:11.1f} {r['makespan_s']/3600:11.2f} "
+          f"{r['energy_kwh']:9.1f} {r['job_kwh']:9.1f} "
+          f"{r['idle_kwh']:9.1f} {r['hvac_kwh']:9.1f} "
+          f"{r['makespan_s']/3600:11.2f} "
           f"{r['mean_completion_s']/3600:12.2f}")
 # only compare policies that actually served the fleet (non-queuing cells
 # may reject jobs outright — cheap, but not by doing the work)

@@ -32,6 +32,16 @@ print(f"simulated {trace.n} tasks in {int(res.n_events)} events; "
       f"energy {float(jnp.sum(res.energy))/3.6e6:.2f} kWh; "
       f"rejected {int(res.rejected.sum())}")
 
+# the hierarchical meter stack (paper §3.3): every simulate carries named
+# meters — per-PM direct, per-VM Eq. 6 attribution, whole-IaaS aggregate,
+# and a PUE-style HVAC indirect meter — read them by name:
+rd = res.readings(spec)
+vm_kwh = float(jnp.sum(rd["vm"])) / 3.6e6
+print(f"meter stack: IaaS total {float(rd['iaas_total'])/3.6e6:.2f} kWh = "
+      f"VM-attributed {vm_kwh:.2f} + idle/overhead "
+      f"{float(rd['vm_unattributed'])/3.6e6:.2f}; "
+      f"HVAC (indirect, PUE 1.58) {float(rd['hvac'])/3.6e6:.2f} kWh")
+
 # batched scenario sweep: 4 NIC bandwidths, one compile, one vmapped run
 sweep = engine.CloudParams(pm_cores=64.0, pm_sched="ondemand",
                            net_bw=jnp.asarray([62.5, 125.0, 250.0, 500.0]))

@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from . import machine as mc
-from .energy import PM_RUNNING
+from .energy import PM_RUNNING, meter_readings
 from .engine import (CloudParams, CloudSpec, CloudState, PM_SCHEDULERS,
                      TASK_ACTIVE, TASK_DONE, TASK_PENDING, TASK_REJECTED,
                      Trace, VM_SCHEDULERS)
@@ -68,7 +68,14 @@ def cloud_info(spec: CloudSpec, params: CloudParams, st: CloudState,
         "tasks_done": int((st.task_state == TASK_DONE).sum()),
         "tasks_rejected": int((st.task_state == TASK_REJECTED).sum()),
         "tasks_active": int((st.task_state == TASK_ACTIVE).sum()),
-        "energy_joules": float(st.energy_hi.sum()),
+        "energy_joules": float(st.meters.total.energy),
+        # the whole meter stack, by name (per-PM, per-VM Eq. 6, groups,
+        # whole-IaaS aggregate, indirect meters)
+        "meters": {
+            name: ([float(x) for x in jnp.ravel(v)]
+                   if jnp.ndim(v) else float(v))
+            for name, v in meter_readings(spec.meters, st.meters).items()
+        },
     }
 
 

@@ -1,4 +1,5 @@
-"""Energy modelling (paper §3.3): power states, consumption models, meters.
+"""Energy modelling (paper §3.3): power states, consumption models, and the
+composable hierarchical meter stack.
 
 DISSECT-CF decouples energy from resource simulation via per-spreader
 *utilisation counters* feeding *consumption models* (constant / linear
@@ -6,18 +7,48 @@ interpolation), read by *direct meters*, composed by *aggregators*, with
 *indirect meters* for components not backed by a spreader (HVAC, IaaS
 overhead) and *adjusted aggregation* for dependent meters (VM power, Eq. 6).
 
-Everything here is stateless vector math over the simulation state; the
-engine integrates power over event-horizon intervals (piecewise-constant
-rates make the integral exact — an improvement documented in DESIGN.md) or
-samples it at a metering period (the paper's scheme, reproduced for the
-Fig. 16/17 overhead benchmarks).
+The meter framework follows the engine's static/dynamic split (DESIGN.md §1,
+§3):
+
+* :class:`MeterTopology` — *which* meters exist (per-VM Eq. 6 attribution,
+  hierarchical aggregators over PM groups, indirect meters and their driving
+  signals).  Hashable, lives in ``CloudSpec.meters``; changing it recompiles.
+* :class:`MeterParams` — meter *coefficients* (indirect base draw and signal
+  coefficient, e.g. the HVAC ``PUE - 1``).  A registered-dataclass pytree in
+  ``CloudParams.meter``: traced data, any leaf may carry a leading batch axis
+  for ``simulate_batch``.
+* :class:`MeterState` — the running :class:`MeterAccum` readings, carried
+  through the engine's ``lax.while_loop`` and returned as
+  ``CloudResult.meters``.
+
+Every event horizon the engine exposes one :class:`SimView` of the live
+simulation and calls the pure :func:`observe` hook, which integrates power
+over the interval exactly (piecewise-constant rates make the integral exact —
+an improvement over the paper's polling, see DESIGN.md §3) and additionally
+drives the paper's *sampled* meter at the metering period (the Fig. 16/17
+exact-vs-sampled trade-off).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+
+def kahan_add(hi: jax.Array, lo: jax.Array, x: jax.Array):
+    """One compensated-summation step: ``(hi, lo) += x``.
+
+    Shared by every accumulator in the framework (the engine's simulated
+    clock and all :class:`MeterAccum` energy integrals), so the numerics of
+    long event chains are identical everywhere.
+    """
+    y = x - lo
+    hi2 = hi + y
+    lo2 = (hi2 - hi) - y
+    return hi2, lo2
 
 # Power states of a physical machine (paper Table 1/2 + Fig. 5)
 PM_OFF = 0
@@ -163,12 +194,247 @@ class MeterAccum(NamedTuple):
         return MeterAccum(z, z, z)
 
     def integrate(self, power: jax.Array, dt: jax.Array) -> "MeterAccum":
-        x = power * dt
-        y = x - self.energy_lo
-        hi = self.energy_hi + y
-        lo = (hi - self.energy_hi) - y
+        hi, lo = kahan_add(self.energy_hi, self.energy_lo, power * dt)
         return MeterAccum(hi, lo, power)
 
     @property
     def energy(self) -> jax.Array:
         return self.energy_hi
+
+
+# --------------------------------------------------------------------------
+# The declarative meter stack (paper §3.3, Fig. 7): topology / params / state
+# --------------------------------------------------------------------------
+
+# Signals an indirect meter may be driven by (paper §3.3.1: "system
+# properties not represented by a spreader").
+SIGNAL_IT_POWER = 0   # total instantaneous PM draw (W) — PUE-style HVAC
+SIGNAL_VM_COUNT = 1   # currently hosted VMs — per-VM management overhead
+SIGNAL_QUEUE_LEN = 2  # queued VM requests — IaaS admission/management load
+N_SIGNALS = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class IndirectMeterSpec:
+    """One indirect meter: ``P = base_w + coeff * signal``.
+
+    ``base_w``/``coeff`` here are only the *defaults* that
+    :meth:`MeterParams.for_topology` copies into traced leaves — sweep them
+    through ``CloudParams.meter`` (no recompile), not by editing the spec.
+    """
+
+    name: str
+    signal: int = SIGNAL_IT_POWER
+    base_w: float = 0.0
+    coeff: float = 0.0
+
+
+def hvac_spec(pue_minus_one: float = 0.58, base_w: float = 0.0,
+              name: str = "hvac") -> IndirectMeterSpec:
+    """Data-centre cooling as an indirect meter riding the IT-power signal
+    (PUE-style; default PUE 1.58, a common published DC average)."""
+    return IndirectMeterSpec(name=name, signal=SIGNAL_IT_POWER,
+                             base_w=base_w, coeff=pue_minus_one)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeterTopology:
+    """Spec-static description of the meter stack (which meters exist).
+
+    Hashable — lives in ``CloudSpec.meters`` and is a ``jax.jit`` static
+    argument; per-PM direct meters and the whole-IaaS aggregate are always
+    present (they are the engine's native observables), the rest is
+    declarative:
+
+    * ``vm_direct`` — per-VM adjusted aggregation (paper Eq. 6) through the
+      influence groups of the hosts' CPU spreaders;
+    * ``pm_groups`` — hierarchical aggregators over PM index groups (racks,
+      rows, availability zones);
+    * ``indirect`` — indirect meters with their driving signal and default
+      coefficients (runtime values live in :class:`MeterParams`).
+    """
+
+    vm_direct: bool = True
+    pm_groups: tuple[tuple[int, ...], ...] = ()
+    indirect: tuple[IndirectMeterSpec, ...] = (hvac_spec(),)
+
+    def __post_init__(self):
+        names = [m.name for m in self.indirect]
+        assert len(set(names)) == len(names), (
+            f"duplicate indirect meter names: {names}")
+        reserved = {"pm", "pm_sampled", "iaas_total", "vm",
+                    "vm_unattributed"}
+        reserved |= {f"group{g}" for g in range(len(self.pm_groups))}
+        clash = reserved & set(names)
+        assert not clash, (
+            f"indirect meter name(s) {sorted(clash)} collide with built-in "
+            f"meter_readings keys")
+
+    @property
+    def n_groups(self) -> int:
+        return len(self.pm_groups)
+
+    @property
+    def n_indirect(self) -> int:
+        return len(self.indirect)
+
+    def group_matrix(self, n_pm: int) -> jax.Array:
+        """f32[G, P] membership matrix of the hierarchical aggregators."""
+        member = np.zeros((self.n_groups, n_pm), np.float32)
+        for g, pms in enumerate(self.pm_groups):
+            for p in pms:
+                assert 0 <= p < n_pm, (
+                    f"pm_groups[{g}] references PM {p} outside 0..{n_pm - 1}")
+                member[g, p] = 1.0
+        return jnp.asarray(member)
+
+    def signal_index(self) -> jax.Array:
+        """i32[K] — which :data:`SIGNAL_ <SIGNAL_IT_POWER>` drives each
+        indirect meter."""
+        return jnp.asarray([m.signal for m in self.indirect], jnp.int32)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class MeterParams:
+    """Batchable meter coefficients — the dynamic half of the meter stack.
+
+    ``indirect_base`` / ``indirect_coeff`` are ``f32[K]`` leaves (one entry
+    per ``MeterTopology.indirect`` meter, e.g. the HVAC ``PUE - 1``); a
+    leading batch axis sweeps them through one ``simulate_batch`` compile.
+    The *sampled*-meter period stays in ``CloudParams.metering_period``
+    because it shapes the event horizon (it is engine-event data, not a
+    meter coefficient — DESIGN.md §3).
+    """
+
+    # Build with :meth:`for_topology` — a bare ``MeterParams()`` is an empty
+    # placeholder that ``CloudParams`` fills in for the default topology.
+    # (No ``__post_init__`` defaulting here: pytree unflattening re-runs
+    # ``__init__`` with arbitrary leaf values, e.g. ``vmap`` axis specs.)
+    indirect_base: object = None   # f32[K] watts
+    indirect_coeff: object = None  # f32[K] watts per signal unit
+
+    @classmethod
+    def for_topology(cls, topology: MeterTopology, **overrides
+                     ) -> "MeterParams":
+        """Leaves matching ``topology``, seeded from its per-meter defaults."""
+        kw = dict(
+            indirect_base=jnp.asarray(
+                [m.base_w for m in topology.indirect], jnp.float32),
+            indirect_coeff=jnp.asarray(
+                [m.coeff for m in topology.indirect], jnp.float32),
+        )
+        kw.update(overrides)
+        return cls(**kw)
+
+
+class MeterState(NamedTuple):
+    """Accumulated readings of the whole stack, one pytree carried through
+    the engine loop.  Shapes are fixed by ``(topology, n_pm, n_vm)``."""
+
+    pm: MeterAccum          # [P] per-PM direct meters (exact integral)
+    pm_sampled: jax.Array   # f32[P] the paper's polled meter (§3.3.2)
+    vm: MeterAccum          # [V] per-VM Eq. 6 adjusted aggregation ([0] if off)
+    group: MeterAccum       # [G] hierarchical PM-group aggregators
+    total: MeterAccum       # []  whole-IaaS aggregate
+    indirect: MeterAccum    # [K] indirect meters
+
+    @staticmethod
+    def zero(topology: MeterTopology, n_pm: int, n_vm: int) -> "MeterState":
+        return MeterState(
+            pm=MeterAccum.zero((n_pm,)),
+            pm_sampled=jnp.zeros((n_pm,), jnp.float32),
+            vm=MeterAccum.zero((n_vm if topology.vm_direct else 0,)),
+            group=MeterAccum.zero((topology.n_groups,)),
+            total=MeterAccum.zero(()),
+            indirect=MeterAccum.zero((topology.n_indirect,)),
+        )
+
+
+class SimView(NamedTuple):
+    """The engine's observation surface for one event-horizon interval — the
+    pure inputs :func:`observe` integrates over ``[t, t + dt]``.
+
+    Per-PM power decomposition (for Eq. 6): ``pm_power = pm_idle +
+    pm_span * pm_util`` on linear-model states; ``vm_rate_frac`` is each
+    VM's share of its host CPU spreader's delivered rate and ``vm_host`` is
+    ``-1`` for VMs outside their host's influence group (they draw nothing).
+    """
+
+    pm_power: jax.Array     # f32[P] instantaneous draw (W)
+    pm_idle: jax.Array      # f32[P] state-dependent idle draw
+    pm_span: jax.Array      # f32[P] p_max - p_min on linear states, else 0
+    pm_util: jax.Array      # f32[P] delivered / capacity
+    vm_rate_frac: jax.Array  # f32[V]
+    vm_host: jax.Array      # i32[V] hosting PM, -1 when uncoupled
+    vms_on_host: jax.Array  # i32[P] |G(s_vm)| - 1 per host (Eq. 6 divisor)
+    n_hosted: jax.Array     # f32    SIGNAL_VM_COUNT
+    n_queued: jax.Array     # f32    SIGNAL_QUEUE_LEN
+    tick: jax.Array         # bool   sampled-meter tick fired this interval
+    period: jax.Array       # f32    sampling period (s)
+
+
+def observe(topology: MeterTopology, mparams: MeterParams, view: SimView,
+            dt: jax.Array, meters: MeterState) -> MeterState:
+    """Advance the whole meter stack over one event-horizon interval.
+
+    Pure function of ``(topology, coefficients, view, dt, previous state)``
+    — the engine's single observation hook.  Exact meters integrate the
+    piecewise-constant power over ``dt``; the per-PM sampled meter adds
+    ``power * period`` on metering ticks (the paper's polling scheme, kept
+    as a plain sum so it reproduces the polled estimate bit-for-bit).
+    """
+    pm = meters.pm.integrate(view.pm_power, dt)
+    pm_sampled = meters.pm_sampled + jnp.where(
+        view.tick, view.pm_power * view.period, 0.0)
+
+    it_power = jnp.sum(view.pm_power)
+    total = meters.total.integrate(it_power, dt)
+
+    if topology.vm_direct:
+        vm_power = vm_power_attribution(
+            view.pm_power, view.pm_idle, view.pm_span, view.pm_util,
+            view.vm_rate_frac, view.vm_host, view.vms_on_host)
+        vm = meters.vm.integrate(vm_power, dt)
+    else:
+        vm = meters.vm
+
+    if topology.n_groups:
+        group_power = topology.group_matrix(view.pm_power.shape[-1]) @ \
+            view.pm_power
+        group = meters.group.integrate(group_power, dt)
+    else:
+        group = meters.group
+
+    if topology.n_indirect:
+        signals = jnp.stack([it_power, view.n_hosted, view.n_queued])
+        drive = signals[topology.signal_index()]
+        ind_power = (jnp.asarray(mparams.indirect_base, jnp.float32)
+                     + jnp.asarray(mparams.indirect_coeff, jnp.float32)
+                     * drive)
+        indirect = meters.indirect.integrate(ind_power, dt)
+    else:
+        indirect = meters.indirect
+
+    return MeterState(pm=pm, pm_sampled=pm_sampled, vm=vm, group=group,
+                      total=total, indirect=indirect)
+
+
+def meter_readings(topology: MeterTopology, meters: MeterState
+                   ) -> dict[str, jax.Array]:
+    """Named energy readings (J) of a :class:`MeterState` — works on single
+    and batched results (meter axes are trailing)."""
+    out = {
+        "pm": meters.pm.energy,
+        "pm_sampled": meters.pm_sampled,
+        "iaas_total": meters.total.energy,
+    }
+    if topology.vm_direct:
+        out["vm"] = meters.vm.energy
+        out["vm_unattributed"] = (meters.total.energy
+                                  - jnp.sum(meters.vm.energy, axis=-1))
+    for g, pms in enumerate(topology.pm_groups):
+        out[f"group{g}"] = meters.group.energy[..., g]
+    for k, m in enumerate(topology.indirect):
+        out[m.name] = meters.indirect.energy[..., k]
+    return out

@@ -33,11 +33,19 @@ The simulation semantics are unchanged by the split:
   flat spreader space (:class:`repro.core.machine.SpreaderLayout`); the
   low-level sharing logic is looked up in :data:`repro.core.fairshare.SCHEDULERS`
   by ``spec.scheduler`` and assigns all rates at once.
-* **Energy metering (§3.3)** — exact piecewise integration of the per-PM
-  power model every horizon (our improvement), plus the paper's periodic
-  *sampled* metering when ``params.metering_period > 0`` (reproduces the
-  Fig. 16/17 overhead trade-off).  The period is data: one program covers
-  metered and meter-less points via ``jnp.isfinite`` masking.
+* **Energy metering (§3.3)** — a declarative *meter stack*: the spec-static
+  :class:`~repro.core.energy.MeterTopology` (``spec.meters``) says which
+  meters exist, the batchable :class:`~repro.core.energy.MeterParams`
+  (``params.meter``) carries their coefficients, and every horizon the body
+  builds one :class:`~repro.core.energy.SimView` and calls the pure
+  :func:`~repro.core.energy.observe` hook.  The default stack yields per-PM
+  direct meters (exact piecewise integration — our improvement), per-VM
+  Eq. 6 adjusted aggregation through the influence groups, the whole-IaaS
+  aggregate, and a PUE-style HVAC indirect meter, all under
+  ``CloudResult.meters``; the paper's periodic *sampled* metering runs when
+  ``params.metering_period > 0`` (reproduces the Fig. 16/17 overhead
+  trade-off).  The period is data: one program covers metered and
+  meter-less points via ``jnp.isfinite`` masking.
 * **Infrastructure (§3.4)** — PM power-state machine (Table 1/2, incl. the
   *hidden consumer* complex model), VM lifecycle (Fig. 6) where each VM slot
   rewrites its single consumption in place: image transfer -> boot -> task
@@ -61,9 +69,12 @@ import jax.numpy as jnp
 
 from . import machine as mc
 from .arrays import KIND_BOOT, KIND_HIDDEN, KIND_IMAGE_XFER, KIND_TASK
-from .energy import (PM_OFF, PM_RUNNING, PM_SWITCHING_OFF, PM_SWITCHING_ON,
-                     PowerStateTable, instantaneous_power)
+from .energy import (MODEL_LINEAR, PM_OFF, PM_RUNNING, PM_SWITCHING_OFF,
+                     PM_SWITCHING_ON, MeterParams, MeterState, MeterTopology,
+                     PowerStateTable, SimView, instantaneous_power, kahan_add,
+                     meter_readings, observe)
 from .fairshare import SCHEDULERS
+from .influence import coupled_vm_counts, influence_labels
 
 KIND_MIGRATE = 5
 
@@ -97,6 +108,7 @@ class CloudSpec:
     backend: str = "jnp"         # 'jnp' | 'pallas' segmented reductions
     max_events: int = 2_000_000
     max_fill_iters: int = 64
+    meters: MeterTopology = MeterTopology()  # which meters exist (§3.3)
 
     def __post_init__(self):
         assert self.scheduler in SCHEDULERS, (
@@ -158,6 +170,7 @@ class CloudParams:
     vm_sched: object = 0           # code into VM_SCHEDULERS (str accepted)
     pm_sched: object = 0           # code into PM_SCHEDULERS (str accepted)
     power: PowerStateTable = None  # per-power-state consumption model
+    meter: MeterParams = None      # meter-stack coefficients (spec.meters)
 
     def __post_init__(self):
         object.__setattr__(self, "vm_sched",
@@ -166,14 +179,20 @@ class CloudParams:
                            _sched_code(self.pm_sched, PM_SCHEDULERS))
         if self.power is None:
             object.__setattr__(self, "power", PowerStateTable.simple())
+        if self.meter is None:
+            object.__setattr__(
+                self, "meter", MeterParams.for_topology(MeterTopology()))
 
     @classmethod
     def for_spec(cls, spec: CloudSpec, **kw) -> "CloudParams":
         """Defaults consistent with ``spec`` (complex power model when
-        ``spec.complex_power``), overridable per keyword."""
+        ``spec.complex_power``, meter coefficients shaped to
+        ``spec.meters``), overridable per keyword."""
         if "power" not in kw:
             kw["power"] = (PowerStateTable.complex_model()
                            if spec.complex_power else PowerStateTable.simple())
+        if "meter" not in kw:
+            kw["meter"] = MeterParams.for_topology(spec.meters)
         return cls(**kw)
 
 
@@ -246,31 +265,64 @@ class CloudState(NamedTuple):
     pstate_end: jax.Array  # f32[P] (simple model transition deadline)
     free_cores: jax.Array  # f32[P]
 
-    energy_hi: jax.Array   # f32[P] integrated PM energy (J), Kahan
-    energy_lo: jax.Array
-    energy_sampled: jax.Array  # f32[P] paper-style polled meter
-    meter_next: jax.Array      # f32 next sample tick (inf when disabled)
+    meters: MeterState     # the meter stack's accumulated readings (§3.3)
+    meter_next: jax.Array  # f32 next sample tick (inf when disabled)
     processed: jax.Array   # f32[S] provider-side utilisation counters
 
     overflow: jax.Array    # bool — VM slot pool exhausted at some dispatch
     running: jax.Array     # bool
+
+    # Pre-meter-stack views (the default stack's per-PM direct meters).
+    @property
+    def energy_hi(self) -> jax.Array:
+        return self.meters.pm.energy_hi
+
+    @property
+    def energy_lo(self) -> jax.Array:
+        return self.meters.pm.energy_lo
+
+    @property
+    def energy_sampled(self) -> jax.Array:
+        return self.meters.pm_sampled
 
 
 class CloudResult(NamedTuple):
     state: CloudState
     completion: jax.Array   # f32[T] task completion times (inf: not finished)
     rejected: jax.Array     # bool[T]
-    energy: jax.Array       # f32[P] integrated energy (J)
-    energy_sampled: jax.Array
+    energy: jax.Array       # f32[P] per-PM integrated energy (J) — a view of
+    #                         meters.pm, kept for pre-meter-stack callers
+    energy_sampled: jax.Array  # f32[P] — view of meters.pm_sampled
+    meters: MeterState      # the full meter stack (per-PM, per-VM Eq. 6,
+    #                         PM groups, whole-IaaS, indirect meters)
     n_events: jax.Array
     t_end: jax.Array
     overflow: jax.Array
+
+    def readings(self, spec: "CloudSpec") -> dict[str, jax.Array]:
+        """Named energy readings of the stack (see
+        :func:`repro.core.energy.meter_readings`)."""
+        return meter_readings(spec.meters, self.meters)
+
+
+def _check_meter_params(spec: CloudSpec, params: CloudParams) -> None:
+    """Meter coefficients must match the spec's topology (trailing K axis)."""
+    K = spec.meters.n_indirect
+    for name in ("indirect_base", "indirect_coeff"):
+        shape = jnp.shape(getattr(params.meter, name))
+        if shape[-1:] != (K,):
+            raise ValueError(
+                f"CloudParams.meter.{name} has shape {shape} but "
+                f"spec.meters declares {K} indirect meter(s); build the "
+                f"params with CloudParams.for_spec(spec) or "
+                f"MeterParams.for_topology(spec.meters)")
 
 
 def init_state(spec: CloudSpec, trace: Trace,
                params: CloudParams | None = None) -> CloudState:
     if params is None:
         params = CloudParams.for_spec(spec)
+    _check_meter_params(spec, params)
     P, V, T = spec.n_pm, spec.n_vm, trace.n
     lay = spec.layout
     F = V + P
@@ -297,9 +349,7 @@ def init_state(spec: CloudSpec, trace: Trace,
         pstate=pstate0,
         pstate_end=jnp.full((P,), jnp.inf, jnp.float32),
         free_cores=jnp.full((P,), jnp.asarray(params.pm_cores, jnp.float32)),
-        energy_hi=jnp.zeros((P,), jnp.float32),
-        energy_lo=jnp.zeros((P,), jnp.float32),
-        energy_sampled=jnp.zeros((P,), jnp.float32),
+        meters=MeterState.zero(spec.meters, P, V),
         meter_next=jnp.where(period > 0, period, jnp.inf).astype(jnp.float32),
         processed=jnp.zeros((lay.S,), jnp.float32),
         overflow=jnp.bool_(False),
@@ -342,6 +392,55 @@ def _rates(spec: CloudSpec, st: CloudState, perf: jax.Array):
     r = rate_fn(st.f_prov, st.f_cons, st.f_pl, live, perf,
                 backend=spec.backend, max_iters=spec.max_fill_iters)
     return r, live, thresh
+
+
+def _sim_view(spec: CloudSpec, params: CloudParams, trace: Trace,
+              st: CloudState, r: jax.Array, live: jax.Array,
+              tick: jax.Array, period: jax.Array) -> SimView:
+    """Build the meter stack's observation surface for the current interval
+    (paper Fig. 7: utilisation counters -> consumption models -> meters).
+
+    Everything is read from the pre-update state: rates are constant over
+    ``[t, t + dt]``, so the view holds for the whole interval.  The per-VM
+    half wires Eq. 6 through :mod:`repro.core.influence`: a VM draws power
+    iff its spreader sits in its host CPU spreader's influence group, and
+    the idle-share divisor is that group's VM count (``|G(s_vm)| - 1``).
+    """
+    lay = spec.layout
+    P, V = spec.n_pm, spec.n_vm
+    table = params.power
+
+    delivered = jax.ops.segment_sum(jnp.where(live, r, 0.0), st.f_prov,
+                                    num_segments=lay.S)
+    cpu_del = delivered[lay.cpu0:lay.cpu0 + P]
+    cpu_cap = jnp.maximum(params.pm_cores * params.perf_core, 1e-30)
+    util = cpu_del / cpu_cap
+    power = instantaneous_power(table, st.pstate, util)
+    p_idle = table.p_min[st.pstate]
+    p_span = jnp.where(table.mode[st.pstate] == MODEL_LINEAR,
+                       table.p_max[st.pstate] - p_idle, 0.0)
+
+    if spec.meters.vm_direct:
+        labels = influence_labels(st.f_prov, st.f_cons, live, lay.S)
+        in_grp, vms_on_host = coupled_vm_counts(
+            labels, lay.cpu0 + st.vm_host, lay.vm0 + jnp.arange(V),
+            st.vm_host, P)
+        vm_rate_frac = (jnp.where(in_grp, r[:V], 0.0)
+                        / jnp.maximum(cpu_del[st.vm_host], 1e-30))
+        vm_host = jnp.where(in_grp, st.vm_host, -1)
+    else:
+        vms_on_host = jnp.zeros((P,), jnp.int32)
+        vm_rate_frac = jnp.zeros((V,), jnp.float32)
+        vm_host = jnp.full((V,), -1, jnp.int32)
+
+    hosted = st.vstage != mc.VM_FREE
+    queued = (st.task_state == TASK_PENDING) & (trace.arrival <= st.t)
+    return SimView(
+        pm_power=power, pm_idle=p_idle, pm_span=p_span, pm_util=util,
+        vm_rate_frac=vm_rate_frac, vm_host=vm_host, vms_on_host=vms_on_host,
+        n_hosted=hosted.sum().astype(jnp.float32),
+        n_queued=queued.sum().astype(jnp.float32),
+        tick=tick, period=period)
 
 
 def _dispatch_loop(spec: CloudSpec, params: CloudParams, trace: Trace,
@@ -492,7 +591,6 @@ def _simulate_impl(spec: CloudSpec, trace: Trace, params: CloudParams,
     parameter point — no python branch below depends on a params value)."""
     lay = spec.layout
     P, V, T = spec.n_pm, spec.n_vm, trace.n
-    power_table = params.power
     st0 = init_state(spec, trace, params) if state is None else state
     # Arrivals at exactly the current clock (e.g. t=0) must be served before
     # the first horizon jump — later arrivals get their scheduler pass inside
@@ -533,22 +631,18 @@ def _simulate_impl(spec: CloudSpec, trace: Trace, params: CloudParams,
         has_event = dt < _BIG
         dt = jnp.where(has_event, jnp.maximum(dt, 0.0), 0.0)
 
-        # ---- energy: exact piecewise integration over [t, t+dt] -------------
-        delivered = jax.ops.segment_sum(jnp.where(live, r, 0.0), st.f_prov,
-                                        num_segments=lay.S)
-        cpu_del = delivered[lay.cpu0:lay.cpu0 + P]
-        cpu_cap = jnp.maximum(params.pm_cores * params.perf_core, 1e-30)
-        util = cpu_del / cpu_cap
-        power = instantaneous_power(power_table, st.pstate, util)
-        x = power * dt
-        y = x - st.energy_lo
-        e_hi = st.energy_hi + y
-        e_lo = (e_hi - st.energy_hi) - y
+        # ---- observe: the meter stack integrates [t, t+dt] ------------------
+        # One pure hook (energy.observe) advances every meter — per-PM exact
+        # integrals, per-VM Eq. 6 attribution, group/IaaS aggregates,
+        # indirect meters, and the paper's sampled meter on its tick.
+        t_new, t_c = kahan_add(st.t, st.t_c, dt)
+        tick = jnp.isfinite(st.meter_next) & (st.meter_next <= t_new)
+        period = jnp.asarray(params.metering_period, jnp.float32)
+        meter_next = jnp.where(tick, st.meter_next + period, st.meter_next)
+        view = _sim_view(spec, params, trace, st, r, live, tick, period)
+        meters = observe(spec.meters, params.meter, view, dt, st.meters)
 
-        # ---- advance clock + drain flows ------------------------------------
-        yk = dt - st.t_c
-        t_new = st.t + yk
-        t_c = (t_new - st.t) - yk
+        # ---- drain flows ----------------------------------------------------
         f_pr = jnp.where(live, jnp.maximum(st.f_pr - r * dt, 0.0), st.f_pr)
         done = live & (f_pr <= thresh)
         processed = st.processed + jax.ops.segment_sum(
@@ -646,13 +740,6 @@ def _simulate_impl(spec: CloudSpec, trace: Trace, params: CloudParams,
         pstate = jnp.where(poffend, PM_OFF, pstate)
         pstate_end = jnp.where(ponend | poffend, jnp.inf, pstate_end)
 
-        # sampled meter tick (paper §3.3.2 polling scheme); the period is
-        # data — jnp.isfinite(meter_next) gates metered vs meter-less points
-        tick = jnp.isfinite(st.meter_next) & (st.meter_next <= t_new)
-        period = jnp.asarray(params.metering_period, jnp.float32)
-        energy_sampled = st.energy_sampled + jnp.where(tick, power * period, 0.0)
-        meter_next = jnp.where(tick, st.meter_next + period, st.meter_next)
-
         st = st._replace(
             t=t_new, t_c=t_c, n_events=st.n_events + 1,
             f_pr=f_pr, f_total=f_total, f_pl=f_pl, f_prov=f_prov,
@@ -661,8 +748,7 @@ def _simulate_impl(spec: CloudSpec, trace: Trace, params: CloudParams,
             task_state=task_state, t_done=t_done_arr,
             vstage=vstage, vm_host=new_host, free_cores=free_cores,
             pstate=pstate, pstate_end=pstate_end,
-            energy_hi=e_hi, energy_lo=e_lo,
-            energy_sampled=energy_sampled, meter_next=meter_next,
+            meters=meters, meter_next=meter_next,
             processed=processed,
         )
 
@@ -692,8 +778,9 @@ def _simulate_impl(spec: CloudSpec, trace: Trace, params: CloudParams,
         state=st,
         completion=st.t_done,
         rejected=st.task_state == TASK_REJECTED,
-        energy=st.energy_hi,
-        energy_sampled=st.energy_sampled,
+        energy=st.meters.pm.energy,
+        energy_sampled=st.meters.pm_sampled,
+        meters=st.meters,
         n_events=st.n_events,
         t_end=st.t,
         overflow=st.overflow,

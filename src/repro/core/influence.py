@@ -64,3 +64,25 @@ def group_sizes(labels: jax.Array) -> jax.Array:
 
 def same_group(labels: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
     return labels[a] == labels[b]
+
+
+def coupled_vm_counts(
+    labels: jax.Array,    # i32[S] influence labels
+    host_cpu: jax.Array,  # i32[V] spreader index of each VM's host CPU
+    vm_spreader: jax.Array,  # i32[V] each VM's own spreader index
+    vm_host: jax.Array,   # i32[V] hosting PM index
+    n_pm: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Eq. 6 group membership: which VMs sit in their host CPU spreader's
+    influence group, and how many such VMs each PM carries.
+
+    The paper defines the VM-power divisor as ``|G(s_vm)| - 1`` — the VM's
+    influence group minus the host CPU spreader itself; counting sibling VM
+    spreaders of the component directly keeps the engine's hidden consumer
+    (complex power model) out of the divisor.  Returns
+    ``(in_group bool[V], vms_on_host i32[P])``.
+    """
+    in_group = same_group(labels, host_cpu, vm_spreader)
+    vms_on_host = jax.ops.segment_sum(
+        in_group.astype(jnp.int32), vm_host, num_segments=n_pm)
+    return in_group, vms_on_host

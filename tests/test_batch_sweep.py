@@ -78,6 +78,17 @@ def test_batched_matches_sequential_params_sweep():
         np.testing.assert_allclose(np.asarray(batched.energy_sampled[i]),
                                    np.asarray(single.energy_sampled),
                                    rtol=1e-6, atol=1e-6)
+        # the whole meter stack must batch too (per-VM Eq. 6, whole-IaaS
+        # aggregate, indirect meters)
+        np.testing.assert_allclose(np.asarray(batched.meters.vm.energy[i]),
+                                   np.asarray(single.meters.vm.energy),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(batched.meters.total.energy[i]),
+            np.asarray(single.meters.total.energy), rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(batched.meters.indirect.energy[i]),
+            np.asarray(single.meters.indirect.energy), rtol=1e-6, atol=1e-6)
         assert int(batched.n_events[i]) == int(single.n_events)
 
 

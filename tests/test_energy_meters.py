@@ -1,13 +1,16 @@
 """Energy-metering framework tests (paper §3.3): direct meters, indirect
-meters (HVAC), aggregators, and the Eq. 6 adjusted-aggregation VM power
-attribution."""
+meters (HVAC), aggregators, the Eq. 6 adjusted-aggregation VM power
+attribution, and the pure observe() hook of the meter stack (end-to-end
+engine coverage lives in test_meter_stack.py)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.energy import (MeterAccum, PowerStateTable, hvac_meter,
-                               instantaneous_power, spreader_utilisation,
+from repro.core.energy import (MeterAccum, MeterParams, MeterState,
+                               MeterTopology, PowerStateTable, SimView,
+                               hvac_meter, instantaneous_power, kahan_add,
+                               meter_readings, observe, spreader_utilisation,
                                vm_power_attribution)
 
 
@@ -75,3 +78,61 @@ def test_meter_accumulator_kahan():
         acc = acc.integrate(jnp.float32(0.1), jnp.float32(0.01))
     np.testing.assert_allclose(float(acc.energy), 10.0, rtol=1e-5)
     assert float(acc.last_power) == np.float32(0.1)
+
+
+def test_kahan_add_compensates_f32_drift():
+    """The shared compensated-summation step (used by the engine clock and
+    every MeterAccum): 1e5 additions of 0.01 stay exact in f32 where the
+    naive sum drifts."""
+    hi = lo = jnp.float32(0.0)
+    naive = np.float32(0.0)
+    for _ in range(100_000):
+        hi, lo = kahan_add(hi, lo, jnp.float32(0.01))
+        naive += np.float32(0.01)
+    assert abs(float(hi) - 1000.0) < 1e-2
+    assert abs(float(naive) - 1000.0) > abs(float(hi) - 1000.0)
+
+
+def _view(pm_power, tick=False, period=0.0, **kw):
+    P = pm_power.shape[0]
+    base = dict(
+        pm_power=pm_power,
+        pm_idle=jnp.zeros((P,)), pm_span=jnp.zeros((P,)),
+        pm_util=jnp.zeros((P,)),
+        vm_rate_frac=jnp.zeros((2,)), vm_host=jnp.full((2,), -1, jnp.int32),
+        vms_on_host=jnp.zeros((P,), jnp.int32),
+        n_hosted=jnp.float32(0.0), n_queued=jnp.float32(0.0),
+        tick=jnp.bool_(tick), period=jnp.float32(period))
+    base.update(kw)
+    return SimView(**base)
+
+
+def test_observe_advances_all_meter_layers():
+    """The pure hook: one observation step integrates the direct, aggregate,
+    hierarchical-group and indirect meters consistently."""
+    topo = MeterTopology(pm_groups=((0, 1), (1,)))
+    mp = MeterParams.for_topology(topo)   # default hvac: 0.58 * IT power
+    ms = MeterState.zero(topo, n_pm=2, n_vm=2)
+    power = jnp.asarray([100.0, 50.0])
+    ms = observe(topo, mp, _view(power), jnp.float32(2.0), ms)
+    ms = observe(topo, mp, _view(power), jnp.float32(1.0), ms)
+    rd = meter_readings(topo, ms)
+    np.testing.assert_allclose(np.asarray(rd["pm"]), [300.0, 150.0])
+    np.testing.assert_allclose(float(rd["iaas_total"]), 450.0)
+    np.testing.assert_allclose(float(rd["group0"]), 450.0)
+    np.testing.assert_allclose(float(rd["group1"]), 150.0)
+    np.testing.assert_allclose(float(rd["hvac"]), 0.58 * 450.0, rtol=1e-6)
+
+
+def test_observe_sampled_meter_only_on_tick():
+    topo = MeterTopology()
+    mp = MeterParams.for_topology(topo)
+    ms = MeterState.zero(topo, n_pm=1, n_vm=2)
+    power = jnp.asarray([100.0])
+    ms = observe(topo, mp, _view(power), jnp.float32(1.0), ms)
+    assert float(ms.pm_sampled[0]) == 0.0
+    ms = observe(topo, mp, _view(power, tick=True, period=2.0),
+                 jnp.float32(0.5), ms)
+    # polled estimate: power at the tick times the period (paper §3.3.2)
+    np.testing.assert_allclose(float(ms.pm_sampled[0]), 200.0)
+    np.testing.assert_allclose(float(ms.pm.energy[0]), 150.0)

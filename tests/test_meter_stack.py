@@ -1,0 +1,230 @@
+"""End-to-end tests of the composable hierarchical meter stack (paper §3.3,
+Fig. 7): the engine's observe() hook, per-VM Eq. 6 adjusted aggregation,
+hierarchical PM-group / whole-IaaS aggregators, indirect meters, and the
+exact-vs-sampled trade-off (Fig. 16/17) — all on live simulations, plus
+batched meter coefficients through one ``simulate_batch`` compile.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine as eng
+from repro.core.energy import (SIGNAL_QUEUE_LEN, IndirectMeterSpec,
+                               MeterParams, MeterTopology, hvac_spec)
+
+# Table 1 figures used by the hand timelines below
+IDLE_W = 368.8
+FULL_W = 722.7
+
+
+def _cloud(**kw):
+    base = dict(n_pm=1, n_vm=16, pm_cores=4.0, net_bw=100.0, repo_bw=200.0,
+                image_mb=100.0, boot_work=4.0, latency_s=0.0)
+    base.update(kw)
+    return eng.make_cloud(**base)
+
+
+def _trace(arrival, cores, runtime):
+    arrival = jnp.asarray(arrival, jnp.float32)
+    cores = jnp.asarray(cores, jnp.float32)
+    runtime = jnp.asarray(runtime, jnp.float32)
+    return eng.Trace(arrival=arrival, cores=cores, work=runtime * cores)
+
+
+def test_default_stack_exposes_four_meter_kinds():
+    """One simulate call carries per-PM direct, per-VM Eq. 6, whole-IaaS
+    aggregate, and an HVAC indirect meter, all readable by name."""
+    spec, params = _cloud(n_pm=2)
+    res = eng.simulate(spec, _trace([0.0, 1.0], [1.0, 2.0], [5.0, 8.0]),
+                      params=params)
+    rd = res.readings(spec)
+    assert {"pm", "vm", "iaas_total", "hvac"} <= set(rd)
+    assert rd["pm"].shape == (2,)
+    assert rd["vm"].shape == (16,)
+    assert rd["iaas_total"].shape == ()
+    assert float(jnp.sum(rd["vm"])) > 0.0
+    assert float(rd["hvac"]) > 0.0
+    # aggregate meter == sum of the direct meters it composes
+    np.testing.assert_allclose(float(rd["iaas_total"]),
+                               float(jnp.sum(rd["pm"])), rtol=1e-6)
+    # indirect HVAC rides the IT-power signal: exactly PUE-1 times IT energy
+    np.testing.assert_allclose(float(rd["hvac"]),
+                               0.58 * float(rd["iaas_total"]), rtol=1e-5)
+
+
+def test_legacy_energy_views_alias_pm_meter():
+    spec, params = _cloud()
+    res = eng.simulate(spec, _trace([0.0], [4.0], [10.0]), params=params)
+    assert np.array_equal(np.asarray(res.energy),
+                          np.asarray(res.meters.pm.energy))
+    assert np.array_equal(np.asarray(res.state.energy_hi),
+                          np.asarray(res.meters.pm.energy))
+    assert np.array_equal(np.asarray(res.energy_sampled),
+                          np.asarray(res.meters.pm_sampled))
+
+
+def test_vm_attribution_single_task_hand_timeline():
+    """One 4-core task on one 4-core PM: 1s image transfer (VM network-
+    coupled -> draws nothing), 1s boot + 10s task at full load (VM is the
+    whole influence group -> draws everything).  Eq. 6 splits the PM energy
+    into VM-attributed and unattributed-idle parts."""
+    spec, params = _cloud()
+    res = eng.simulate(spec, _trace([0.0], [4.0], [10.0]), params=params)
+    rd = res.readings(spec)
+    np.testing.assert_allclose(float(rd["vm"][0]), FULL_W * 11.0, rtol=1e-3)
+    np.testing.assert_allclose(float(rd["vm_unattributed"]), IDLE_W * 1.0,
+                               rtol=1e-2)
+    np.testing.assert_allclose(float(rd["iaas_total"]),
+                               IDLE_W * 1.0 + FULL_W * 11.0, rtol=1e-3)
+
+
+def test_vm_attribution_two_vms_sum_to_pm_with_idle_remainder():
+    """Two 2-core tasks sharing one PM: during coupled phases each VM draws
+    span*util*frac + idle/2 and the dependent meters double-count by design
+    (paper §3.3.2): VM sum + unattributed == PM meter."""
+    spec, params = _cloud()
+    tr = _trace([0.0, 0.0], [2.0, 2.0], [10.0, 10.0])
+    res = eng.simulate(spec, tr, params=params)
+    rd = res.readings(spec)
+    vm = np.asarray(rd["vm"])[:2]
+    # symmetric VMs: equal shares
+    np.testing.assert_allclose(vm[0], vm[1], rtol=1e-4)
+    # timeline: 2s shared transfer (idle, unattributed), 2s boot + 10s task
+    # at util 1 split evenly
+    np.testing.assert_allclose(vm.sum(), FULL_W * 12.0, rtol=1e-3)
+    np.testing.assert_allclose(float(rd["vm_unattributed"]), IDLE_W * 2.0,
+                               rtol=1e-2)
+    # reconstruction identity, to float32 accumulation accuracy
+    np.testing.assert_allclose(vm.sum() + float(rd["vm_unattributed"]),
+                               float(rd["iaas_total"]), rtol=1e-5)
+
+
+def test_sampled_metering_converges_to_exact_integral():
+    """Fig. 16/17 end-to-end: the paper's polled meter approaches the exact
+    event-horizon integral as the metering period shrinks — swept as one
+    batched run (the period is CloudParams data)."""
+    spec, params = _cloud()
+    tr = _trace([0.0, 0.5], [1.0, 2.0], [10.0, 7.0])
+    periods = (4.0, 1.0, 0.05)
+    pts = [dataclasses.replace(params, metering_period=jnp.float32(p))
+           for p in periods]
+    res = eng.simulate_batch(spec, tr, eng.stack_params(pts))
+    exact = np.asarray(res.energy).sum(axis=-1)
+    sampled = np.asarray(res.energy_sampled).sum(axis=-1)
+    rel_err = np.abs(sampled - exact) / exact
+    assert rel_err[2] < rel_err[0], rel_err
+    assert rel_err[2] < 0.01, rel_err
+    # exact integral is period-independent (it has no sampling events)
+    np.testing.assert_allclose(exact, exact[0], rtol=1e-5)
+
+
+def test_batched_pue_coefficients_match_sequential():
+    """A [B]-leaf sweep of the HVAC pue_minus_one coefficient runs through
+    one simulate_batch compile and matches per-point sequential simulate
+    calls exactly."""
+    spec, params = _cloud(n_pm=2)
+    tr = _trace([0.0, 1.0, 2.0], [1.0, 2.0, 4.0], [6.0, 9.0, 4.0])
+    pues = (0.1, 0.3, 0.58, 0.9)
+    pts = [dataclasses.replace(
+        params, meter=MeterParams.for_topology(
+            spec.meters, indirect_coeff=jnp.asarray([c], jnp.float32)))
+        for c in pues]
+    batched = eng.simulate_batch(spec, tr, eng.stack_params(pts))
+    for i, pt in enumerate(pts):
+        single = eng.simulate(spec, tr, params=pt)
+        np.testing.assert_array_equal(
+            np.asarray(batched.meters.indirect.energy[i]),
+            np.asarray(single.meters.indirect.energy))
+        np.testing.assert_array_equal(np.asarray(batched.meters.vm.energy[i]),
+                                      np.asarray(single.meters.vm.energy))
+        np.testing.assert_array_equal(np.asarray(batched.energy[i]),
+                                      np.asarray(single.energy))
+        assert int(batched.n_events[i]) == int(single.n_events)
+    # and the coefficient really flows through: hvac scales with PUE-1
+    hvac = np.asarray(batched.meters.indirect.energy[:, 0])
+    it = np.asarray(batched.meters.total.energy)
+    np.testing.assert_allclose(hvac, np.asarray(pues) * it, rtol=1e-5)
+
+
+def test_hierarchical_pm_group_aggregators():
+    """Rack-style PM groups: group meters integrate the member PMs' summed
+    power (hierarchical aggregation, paper Fig. 7)."""
+    topo = MeterTopology(pm_groups=((0, 1), (2, 3)), indirect=(hvac_spec(),))
+    spec, params = _cloud(n_pm=4, meters=topo)
+    tr = _trace([0.0, 0.0, 3.0], [4.0, 4.0, 2.0], [10.0, 6.0, 5.0])
+    res = eng.simulate(spec, tr, params=params)
+    rd = res.readings(spec)
+    pm = np.asarray(rd["pm"])
+    np.testing.assert_allclose(float(rd["group0"]), pm[0] + pm[1], rtol=1e-5)
+    np.testing.assert_allclose(float(rd["group1"]), pm[2] + pm[3], rtol=1e-5)
+
+
+def test_indirect_meter_constant_base_and_queue_signal():
+    """Indirect meters not driven by IT power: a constant-draw meter
+    integrates base_w * t_end; a queue-signal meter is zero when nothing
+    ever queues."""
+    topo = MeterTopology(indirect=(
+        IndirectMeterSpec("mgmt", SIGNAL_QUEUE_LEN, base_w=5.0, coeff=0.0),
+        IndirectMeterSpec("admission", SIGNAL_QUEUE_LEN, base_w=0.0,
+                          coeff=2.0),
+    ))
+    spec, params = _cloud(meters=topo)
+    res = eng.simulate(spec, _trace([0.0], [1.0], [5.0]), params=params)
+    rd = res.readings(spec)
+    np.testing.assert_allclose(float(rd["mgmt"]), 5.0 * float(res.t_end),
+                               rtol=1e-5)
+    # a single task that is dispatched immediately never sits queued
+    assert float(rd["admission"]) == 0.0
+
+
+def test_indirect_meter_names_cannot_shadow_builtin_readings():
+    with pytest.raises(AssertionError, match="collide"):
+        MeterTopology(indirect=(IndirectMeterSpec("pm"),))
+    with pytest.raises(AssertionError, match="collide"):
+        MeterTopology(pm_groups=((0,),),
+                      indirect=(IndirectMeterSpec("group0"),))
+    with pytest.raises(AssertionError, match="duplicate"):
+        MeterTopology(indirect=(IndirectMeterSpec("a"),
+                                IndirectMeterSpec("a")))
+
+
+def test_vm_direct_off_topology():
+    spec, params = _cloud(meters=MeterTopology(vm_direct=False))
+    res = eng.simulate(spec, _trace([0.0], [1.0], [5.0]), params=params)
+    assert res.meters.vm.energy.shape == (0,)
+    rd = res.readings(spec)
+    assert "vm" not in rd
+    assert float(rd["iaas_total"]) > 0.0
+
+
+def test_meter_params_must_match_topology():
+    spec, params = _cloud()
+    spec2 = dataclasses.replace(spec, meters=MeterTopology(indirect=()))
+    tr = _trace([0.0], [1.0], [5.0])
+    with pytest.raises(ValueError, match="indirect meter"):
+        eng.simulate(spec2, tr, params=params)  # K=1 params, K=0 topology
+    # for_spec sizes the coefficients correctly
+    ok = eng.CloudParams.for_spec(spec2)
+    res = eng.simulate(spec2, tr, params=ok)
+    assert res.meters.indirect.energy.shape == (0,)
+
+
+def test_migrating_vm_draws_nothing_during_transfer():
+    """Live migration: while the VM's memory state is in flight it is
+    network-coupled, so Eq. 6 attributes it no CPU power; after resume it
+    draws on the destination host."""
+    spec, params = _cloud(n_pm=2, pm_cores=4.0)
+    tr = _trace([0.0], [2.0], [50.0])
+    res1 = eng.simulate(spec, tr, params=params, t_stop=10.0)
+    vm_before = float(res1.meters.vm.energy[0])
+    st = eng.start_migration(spec, params, res1.state, 0, 1)
+    # drive only the migration transfer window: 1024 MB over 100 MB/s
+    res2 = eng.simulate(spec, tr, params=params, state=st, t_stop=15.0)
+    vm_during = float(res2.meters.vm.energy[0])
+    np.testing.assert_allclose(vm_during, vm_before, rtol=1e-5)
+    st3 = res2.state._replace(running=jnp.bool_(True))
+    res3 = eng.simulate(spec, tr, params=params, state=st3)
+    assert float(res3.meters.vm.energy[0]) > vm_during
+    assert int(res3.state.task_state[0]) == eng.TASK_DONE
