@@ -1,0 +1,63 @@
+"""Trace-ensemble experiment benchmark — per-policy mean / CI over a
+seed-perturbed GWA workload (repro.experiments.ensemble).
+
+Three scheduler policies x R trace replicates of one GWA family run as a
+single sharded ``simulate_batch`` batch; rows report each policy's
+mean +/- CI for energy / attributed energy / idle waste / makespan plus a
+timing summary (snapshotted per PR as ``BENCH_ensemble.json``)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.core import engine
+from repro.experiments import ensemble, shard
+
+POLICIES = (("firstfit", "alwayson"),
+            ("firstfit", "ondemand"),
+            ("smallestfirst", "ondemand"))
+
+
+def run(quick=True) -> list[dict]:
+    n = 200 if quick else 2000
+    replicates = 6 if quick else 16
+    traces = ensemble.gwa_ensemble("das2", n, replicates, pm_cores=64.0,
+                                   seed0=7)
+    spec, base = engine.make_cloud(n_pm=16, n_vm=512, pm_cores=64.0,
+                                   max_events=4_000_000)
+    points = [dataclasses.replace(base, vm_sched=v, pm_sched=p)
+              for v, p in POLICIES]
+    labels = [{"vm_sched": v, "pm_sched": p} for v, p in POLICIES]
+
+    t0 = time.time()
+    res = ensemble.run_ensemble(spec, traces, points, labels=labels)
+    jax.block_until_ready(res.result.t_end)
+    compile_wall = time.time() - t0
+
+    t0 = time.time()
+    res = ensemble.run_ensemble(spec, traces, points, labels=labels)
+    jax.block_until_ready(res.result.t_end)
+    wall = time.time() - t0
+
+    events = int(np.asarray(res.result.n_events).sum())
+    rows = [{
+        "name": "ensemble_gwa_das2",
+        "policies": len(points),
+        "replicates": replicates,
+        "tasks": int(traces[0].n),
+        "batch": len(points) * replicates,
+        "n_devices": jax.device_count(),
+        "shards": shard.shard_count(len(points) * replicates),
+        "compile_wall_s": round(compile_wall, 4),
+        "wall_s": round(wall, 4),
+        "events": events,
+        "events_per_s": round(events / max(wall, 1e-9), 1),
+    }]
+    for r in res.rows:
+        rows.append({"name": "ensemble_policy",
+                     **{k: (round(v, 4) if isinstance(v, float) else v)
+                        for k, v in r.items()}})
+    return rows

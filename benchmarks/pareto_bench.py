@@ -1,0 +1,62 @@
+"""Pareto-front experiment benchmark — energy vs makespan over a power x
+bandwidth grid (repro.experiments.pareto).
+
+A 6-point grid (3 idle-power scalings x the always-on / on-demand PM
+state-schedulers — the latter trades boot-delay makespan for idle energy)
+over one GWA-like trace, run as a single sharded ``simulate_batch`` call.
+Rows report each point's (energy, makespan) and frontier membership plus a
+timing summary so the per-PR ``BENCH_pareto.json`` artifact tracks both
+sweep throughput and frontier stability."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import engine
+from repro.core.trace import filter_fitting, gwa_like_trace
+from repro.experiments import pareto, shard
+
+IDLE_SCALES = (0.5, 0.75, 1.0)
+PM_SCHEDS = ("alwayson", "ondemand")
+
+
+def run(quick=True) -> list[dict]:
+    n = 300 if quick else 3000
+    trace = filter_fitting(gwa_like_trace("das2", n, seed=33), 64.0)
+    spec, base = engine.make_cloud(n_pm=16, n_vm=768, pm_cores=64.0,
+                                   max_events=4_000_000)
+    tables = pareto.power_scale_grid(idle_scales=IDLE_SCALES)
+    points = pareto.param_grid(base, power=tables, pm_sched=list(PM_SCHEDS))
+    labels = pareto.grid_labels(idle_scale=list(IDLE_SCALES),
+                                pm_sched=list(PM_SCHEDS))
+
+    t0 = time.time()
+    res = pareto.sweep(spec, trace, points, labels=labels)
+    jax.block_until_ready(res.result.t_end)
+    compile_wall = time.time() - t0
+
+    t0 = time.time()
+    res = pareto.sweep(spec, trace, points, labels=labels)
+    jax.block_until_ready(res.result.t_end)
+    wall = time.time() - t0
+
+    events = int(np.asarray(res.result.n_events).sum())
+    summary = {
+        "name": "pareto_power_bw_grid",
+        "points": len(points),
+        "tasks": int(trace.n),
+        "n_devices": jax.device_count(),
+        "shards": shard.shard_count(len(points)),
+        "compile_wall_s": round(compile_wall, 4),
+        "wall_s": round(wall, 4),
+        "events": events,
+        "events_per_s": round(events / max(wall, 1e-9), 1),
+        "frontier_size": int(len(res.frontier)),
+        "frontier_points": [int(i) for i in res.frontier],
+    }
+    rows = [summary]
+    for r in res.rows:
+        rows.append({"name": "pareto_point", **r})
+    return rows

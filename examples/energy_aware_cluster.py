@@ -2,9 +2,11 @@
 the paper's technique closed over this framework's own workloads.
 
 Reads the dry-run roofline artifacts (experiments/dryrun/) to characterise
-each (arch x shape) job, builds a mixed fleet trace, sweeps the paper's
-scheduler matrix, and finishes with a live-migration consolidation demo
-(the PM-state-scheduler use case of §3.5.1).
+each (arch x shape) job, builds a mixed fleet trace, runs the scheduler
+*tournament* (the paper's matrix via repro.experiments.tournament), then a
+trace-*ensemble* experiment — mean ± CI per policy over seed-perturbed job
+mixes (docs/experiments.md) — and finishes with a live-migration
+consolidation demo (the PM-state-scheduler use case of §3.5.1).
 
 Run:  PYTHONPATH=src python examples/energy_aware_cluster.py
 """
@@ -12,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import engine
+from repro.experiments import ensemble
 from repro.sched import energy_aware as ea
 
 print("=== energy-aware fleet scheduling " + "=" * 33)
@@ -33,6 +36,8 @@ jobs = ea.default_job_mix(cells, n_jobs=24, seed=2)
 trace = ea.job_trace(jobs, cells, arrival_spread_s=3600.0, seed=2)
 print(f"\nfleet: {trace.n} jobs over 8 pods "
       f"({ea.POD_CHIPS} chips each)\n")
+# the scheduler tournament experiment: the whole VM x PM matrix is one
+# sharded simulate_batch call (repro.experiments.tournament)
 rows = ea.evaluate_schedulers(trace, n_pods=8)
 # meter-stack columns: IT energy (whole-IaaS aggregate), the job-attributed
 # share (per-VM Eq. 6 meters), idle waste, and HVAC (indirect meter)
@@ -53,6 +58,25 @@ worst = max(served, key=lambda r: r["energy_kwh"])
 print(f"\nbest policy: {best['vm_sched']}+{best['pm_sched']} saves "
       f"{100*(1-best['energy_kwh']/worst['energy_kwh']):.1f}% energy vs "
       f"{worst['vm_sched']}+{worst['pm_sched']}")
+
+# ------------------------------------------------------------------ ensemble
+# one job mix is an anecdote: re-sample it and report mean ± 95% CI per
+# policy (the trace-ensemble experiment, docs/experiments.md §5)
+print("\n=== ensemble: mean ± 95% CI over 4 seeded job mixes " + "=" * 14)
+traces = ensemble.job_mix_ensemble(cells, replicates=4, n_jobs=24,
+                                   arrival_spread_s=3600.0, seed0=10)
+policies = [("firstfit", "alwayson"), ("firstfit", "ondemand"),
+            ("smallestfirst", "ondemand")]
+espec = engine.CloudSpec(n_pm=8, n_vm=max(int(traces[0].n), 8))
+er = ensemble.run_ensemble(
+    espec, traces,
+    [ea.fleet_params(vm_sched=v, pm_sched=p) for v, p in policies],
+    labels=[{"policy": f"{v}+{p}"} for v, p in policies])
+for r in er.rows:
+    print(f"{r['policy']:>24s}  energy {r['energy_kwh_mean']:7.1f} "
+          f"± {r['energy_kwh_ci']:6.1f} kWh  idle {r['idle_kwh_mean']:6.1f} "
+          f"± {r['idle_kwh_ci']:5.1f} kWh  makespan "
+          f"{r['makespan_s_mean']/3600:5.2f} ± {r['makespan_s_ci']/3600:4.2f} h")
 
 # ---------------------------------------------------------------- migration
 print("\n=== consolidation via live migration " + "=" * 29)

@@ -13,6 +13,7 @@ import numpy as np
 from repro import configs
 from repro.core import engine
 from repro.core.trace import synthetic_trace
+from repro.experiments import pareto
 from repro.data.pipeline import DataConfig, make_batch
 from repro.models import common as cm, lm
 from repro.serve.engine import Request, ServeEngine
@@ -42,12 +43,16 @@ print(f"meter stack: IaaS total {float(rd['iaas_total'])/3.6e6:.2f} kWh = "
       f"{float(rd['vm_unattributed'])/3.6e6:.2f}; "
       f"HVAC (indirect, PUE 1.58) {float(rd['hvac'])/3.6e6:.2f} kWh")
 
-# batched scenario sweep: 4 NIC bandwidths, one compile, one vmapped run
-sweep = engine.CloudParams(pm_cores=64.0, pm_sched="ondemand",
-                           net_bw=jnp.asarray([62.5, 125.0, 250.0, 500.0]))
-bres = engine.simulate_batch(spec, trace, sweep)
-print("net_bw sweep makespans:",
-      [f"{float(t):.0f}s" for t in bres.t_end])
+# batched sweeps are first-class experiments (docs/experiments.md): grid 4
+# NIC bandwidths into one sharded simulate_batch call and read the
+# energy-vs-makespan Pareto frontier off the meter stack
+bws = [62.5, 125.0, 250.0, 500.0]
+front = pareto.sweep(spec, trace, pareto.param_grid(params, net_bw=bws),
+                     labels=pareto.grid_labels(net_bw=bws))
+for r in front.rows:  # '*' marks frontier membership
+    print(f"{'*' if r['on_frontier'] else ' '} net_bw={r['net_bw']:6.1f}  "
+          f"energy {r['energy_kwh']:.2f} kWh  "
+          f"makespan {r['makespan_s']:4.0f} s")
 
 # ------------------------------------------------------------------- 2. train
 print("=== 2. train a reduced jamba (mamba+MoE hybrid) " + "=" * 18)

@@ -22,6 +22,8 @@ and/or stacked parameter points — an 8-point scenario sweep (Pareto fronts
 over power models, trace ensembles, scheduler tournaments) compiles once
 and runs hardware-parallel, which is how this reproduction extends the
 paper's "fast evaluation of many scheduling scenarios" goal (§1, §4.3).
+Batch-axis semantics and the device-sharding layout are in DESIGN.md §4;
+the first-class experiment kinds live in :mod:`repro.experiments`.
 
 The simulation semantics are unchanged by the split:
 
@@ -212,7 +214,8 @@ def make_cloud(**kw) -> tuple[CloudSpec, CloudParams]:
 
 def stack_params(params: Sequence[CloudParams]) -> CloudParams:
     """Stack parameter points leaf-wise along a new leading batch axis
-    (input to :func:`simulate_batch`)."""
+    (input to :func:`simulate_batch`; batch-axis semantics in
+    DESIGN.md §4)."""
     return jax.tree.map(
         lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *params)
 
@@ -230,7 +233,8 @@ class Trace(NamedTuple):
 
 
 def stack_traces(traces: Sequence[Trace]) -> Trace:
-    """Stack equal-length traces along a new leading batch axis."""
+    """Stack equal-length traces along a new leading batch axis
+    (DESIGN.md §4)."""
     return jax.tree.map(lambda *xs: jnp.stack(xs), *traces)
 
 
@@ -818,7 +822,10 @@ def simulate_batch(spec: CloudSpec, trace: Trace, params: CloudParams,
 
     Returns a :class:`CloudResult` whose every leaf has the batch as its
     leading axis.  Per-point results are numerically identical to the
-    corresponding sequential :func:`simulate` calls.
+    corresponding sequential :func:`simulate` calls.  Batch-axis semantics
+    and the recompile rules are documented in DESIGN.md §4; use
+    :func:`simulate_batch_sharded` (or the experiment layer in
+    :mod:`repro.experiments`) to spread the batch over multiple devices.
     """
     taxes = _trace_axes(trace)
     paxes = _params_axes(spec, params)
@@ -833,6 +840,24 @@ def simulate_batch(spec: CloudSpec, trace: Trace, params: CloudParams,
         lambda tr, pp: _simulate_impl(spec, tr, pp, None, t_stop),
         in_axes=(taxes, paxes))
     return run(trace, params)
+
+
+def simulate_batch_sharded(spec: CloudSpec, trace: Trace,
+                           params: CloudParams,
+                           t_stop: float | jax.Array = jnp.inf,
+                           devices=None) -> CloudResult:
+    """:func:`simulate_batch` with the batch axis sharded over ``devices``
+    via ``shard_map`` (DESIGN.md §4) — the entry point big parameter grids
+    should use so a sweep fills a whole pod instead of one core.
+
+    Per-point results are bit-identical to the unsharded call; with a
+    single device (or a batch size coprime with the device count) it falls
+    back to plain :func:`simulate_batch`.  Implemented in
+    :mod:`repro.experiments.shard` (imported lazily: the core engine has no
+    dependency on the experiment layer).
+    """
+    from repro.experiments.shard import simulate_batch_sharded as impl
+    return impl(spec, trace, params, t_stop, devices)
 
 
 @functools.partial(jax.jit, static_argnames=("spec",))

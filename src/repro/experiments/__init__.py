@@ -1,0 +1,29 @@
+"""First-class sweep experiments on the batched engine (DESIGN.md §4).
+
+Three experiment kinds, all running as a single (optionally device-sharded)
+:func:`repro.core.engine.simulate_batch` call:
+
+* :mod:`~repro.experiments.pareto` — parameter grids scored into
+  energy-vs-makespan Pareto frontiers;
+* :mod:`~repro.experiments.ensemble` — seed-perturbed trace ensembles with
+  per-policy mean / confidence intervals;
+* :mod:`~repro.experiments.tournament` — arbitrary VM x PM scheduler grids
+  (the paper's §4 matrix, generalised);
+* :mod:`~repro.experiments.shard` — the shared batch-axis device sharding
+  underneath all three.
+
+See ``docs/experiments.md`` for a runnable guide.
+"""
+from . import ensemble, pareto, shard, tournament
+from .ensemble import EnsembleResult, gwa_ensemble, run_ensemble
+from .pareto import ParetoResult, param_grid, pareto_front, power_scale_grid
+from .shard import run_batch, simulate_batch_sharded
+from .tournament import TournamentResult, scheduler_grid
+
+__all__ = [
+    "ensemble", "pareto", "shard", "tournament",
+    "EnsembleResult", "gwa_ensemble", "run_ensemble",
+    "ParetoResult", "param_grid", "pareto_front", "power_scale_grid",
+    "run_batch", "simulate_batch_sharded",
+    "TournamentResult", "scheduler_grid",
+]

@@ -1,0 +1,130 @@
+"""Shard a ``simulate_batch`` sweep's batch axis over the available devices.
+
+A stacked sweep (built with :func:`repro.core.engine.stack_params` /
+``stack_traces`` or :func:`repro.experiments.pareto.param_grid`) is one
+``vmap``ed program whose batch axis is embarrassingly parallel: scenario
+points never communicate.  This module splits that axis over a 1-D device
+mesh with ``shard_map`` — each device runs the identical vmapped engine on
+its slice, so an N-point grid uses a whole TPU/GPU pod instead of one core
+(DESIGN.md §4).
+
+* The shard count is the largest divisor of the batch size that fits the
+  device count; when that is 1 (single device, or a prime batch on a
+  mismatched pod) the call falls back to plain single-device
+  :func:`~repro.core.engine.simulate_batch` — same results, no mesh.
+* Per-point results are *bit-identical* to the unsharded call: ``vmap``
+  computes each lane independently, so slicing the batch over devices
+  changes the layout, never the arithmetic (tested in
+  ``tests/test_experiments.py``).
+* On a CPU-only host the path is testable by forcing a multi-device
+  topology: ``XLA_FLAGS=--xla_force_host_platform_device_count=2``
+  (set before ``jax`` initialises).
+
+Every experiment kind in this package (:mod:`~repro.experiments.pareto`,
+:mod:`~repro.experiments.ensemble`, :mod:`~repro.experiments.tournament`)
+routes its batch through :func:`run_batch`, so sharding is a flag, not a
+rewrite.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import engine
+
+
+def batch_flags(spec: engine.CloudSpec, trace: engine.Trace,
+                params: engine.CloudParams) -> tuple[bool, ...]:
+    """Per-leaf "carries a leading batch axis" flags, aligned with
+    ``jax.tree.leaves((trace, params))`` — derived from the engine's own
+    vmap-axis rule so shard_map's layout can never diverge from
+    ``simulate_batch``."""
+    axes = (engine._trace_axes(trace), engine._params_axes(spec, params))
+    return tuple(a == 0 for a in jax.tree.leaves(
+        axes, is_leaf=lambda x: x is None))
+
+
+def batch_size(spec: engine.CloudSpec, trace: engine.Trace,
+               params: engine.CloudParams) -> int:
+    """Length of the sweep's leading batch axis (every batched leaf must
+    agree)."""
+    flags = batch_flags(spec, trace, params)
+    leaves = jax.tree.leaves((trace, params))
+    sizes = {int(jnp.shape(l)[0]) for l, f in zip(leaves, flags) if f}
+    if not sizes:
+        raise ValueError(
+            "no batched leaf (leading batch axis) in `trace` or `params`; "
+            "stack points with stack_params/stack_traces first")
+    if len(sizes) > 1:
+        raise ValueError(
+            f"inconsistent batch-axis lengths across leaves: {sorted(sizes)}")
+    return sizes.pop()
+
+
+def shard_count(n_points: int, n_devices: int | None = None) -> int:
+    """Largest divisor of ``n_points`` that fits on ``n_devices`` — the
+    number of mesh shards :func:`simulate_batch_sharded` will use."""
+    if n_devices is None:
+        n_devices = jax.device_count()
+    for d in range(min(n_points, n_devices), 0, -1):
+        if n_points % d == 0:
+            return d
+    return 1
+
+
+@functools.lru_cache(maxsize=64)
+def _sharded_runner(spec, devs, treedef, flags):
+    """One compiled shard_map program per (spec, device set, tree structure,
+    batch-flag signature) — repeated sweeps reuse it."""
+    mesh = Mesh(np.asarray(devs), ("batch",))
+    in_specs = treedef.unflatten(
+        [P("batch") if f else P() for f in flags])
+
+    def run(trace_params, t_stop):
+        trace, params = trace_params
+        return engine.simulate_batch(spec, trace, params, t_stop)
+
+    fn = shard_map(run, mesh=mesh, in_specs=(in_specs, P()),
+                   out_specs=P("batch"), check_rep=False)
+    return jax.jit(fn)
+
+
+def simulate_batch_sharded(
+        spec: engine.CloudSpec, trace: engine.Trace,
+        params: engine.CloudParams,
+        t_stop: float | jax.Array = jnp.inf,
+        devices=None) -> engine.CloudResult:
+    """:func:`repro.core.engine.simulate_batch`, batch axis sharded over
+    ``devices`` (default: all of ``jax.devices()``) with ``shard_map``.
+
+    Falls back to the plain single-device ``vmap`` when only one shard fits
+    (one device, or a batch size coprime with the device count).  Results
+    are bit-identical either way; only the device layout changes.
+    """
+    trace = jax.tree.map(jnp.asarray, trace)
+    params = jax.tree.map(jnp.asarray, params)
+    n = batch_size(spec, trace, params)
+    devs = tuple(jax.devices() if devices is None else devices)
+    d = shard_count(n, len(devs))
+    if d <= 1:
+        return engine.simulate_batch(spec, trace, params, t_stop)
+    flags = batch_flags(spec, trace, params)
+    treedef = jax.tree.structure((trace, params))
+    runner = _sharded_runner(spec, devs[:d], treedef, flags)
+    return runner((trace, params), jnp.asarray(t_stop, jnp.float32))
+
+
+def run_batch(spec: engine.CloudSpec, trace: engine.Trace,
+              params: engine.CloudParams, *,
+              t_stop: float | jax.Array = jnp.inf,
+              sharded: bool = True, devices=None) -> engine.CloudResult:
+    """The experiment layer's one batch-execution path: sharded over the
+    available devices by default, plain ``simulate_batch`` on request."""
+    if not sharded:
+        return engine.simulate_batch(spec, trace, params, t_stop)
+    return simulate_batch_sharded(spec, trace, params, t_stop, devices)

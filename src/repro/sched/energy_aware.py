@@ -15,9 +15,10 @@ architectures:
    models container/weights staging);
 3. :func:`evaluate_schedulers` sweeps the paper's scheduler matrix
    (first-fit / smallest-first / non-queuing VM schedulers x always-on /
-   on-demand PM schedulers) through one batched
-   :func:`repro.core.engine.simulate_batch` call — scheduler identity is a
-   ``CloudParams`` code, so the whole matrix shares a single compile — and
+   on-demand PM schedulers) through the tournament experiment
+   (:mod:`repro.experiments.tournament` — one sharded
+   :func:`repro.core.engine.simulate_batch` call; scheduler identity is a
+   ``CloudParams`` code, so the whole matrix shares a single compile) and
    reports the engine's meter-stack readings: IT energy (whole-IaaS
    aggregate meter), the job-attributed share (per-VM Eq. 6 meters), the
    unattributed idle waste (what consolidation policies should minimise),
@@ -146,47 +147,23 @@ def fleet_params(*, vm_sched="firstfit", pm_sched="alwayson",
 
 
 def evaluate_schedulers(trace: engine.Trace, *, n_pods: int = 8,
-                        schedulers=None) -> list[dict]:
+                        schedulers=None, sharded: bool = True) -> list[dict]:
     """Sweep the paper's VM x PM scheduler matrix over one job trace.
 
-    The scheduler choice is data (``CloudParams.vm_sched`` / ``pm_sched``
-    integer codes), so the whole 3x2 matrix runs as a single
-    :func:`repro.core.engine.simulate_batch` call — one compile, one
-    hardware-parallel sweep, instead of one compile per cell."""
+    A thin wrapper over the tournament experiment
+    (:func:`repro.experiments.tournament.run`): scheduler choice is data
+    (``CloudParams.vm_sched`` / ``pm_sched`` integer codes), so the whole
+    matrix — the default 3x2, or any grid via ``schedulers`` — runs as a
+    single sharded :func:`repro.core.engine.simulate_batch` call, one
+    compile for every cell."""
+    from repro.experiments import tournament
     if schedulers is None:
-        schedulers = [(v, p)
-                      for v in ("firstfit", "smallestfirst", "nonqueuing")
-                      for p in ("alwayson", "ondemand")]
+        schedulers = tournament.scheduler_grid(
+            ("firstfit", "smallestfirst", "nonqueuing"),
+            ("alwayson", "ondemand"))
     spec = engine.CloudSpec(n_pm=n_pods, n_vm=max(int(trace.n), 8))
-    params = engine.stack_params(
-        [fleet_params(vm_sched=v, pm_sched=p) for v, p in schedulers])
-    res = engine.simulate_batch(spec, trace, params)
-    # meter-stack readings, batched: every value has the matrix as axis 0
-    readings = res.readings(spec)
-    table = []
-    for b, (vm_sched, pm_sched) in enumerate(schedulers):
-        completion = res.completion[b]
-        done = jnp.isfinite(completion)
-        it_kwh = float(readings["iaas_total"][b]) / 3.6e6
-        job_kwh = float(jnp.sum(readings["vm"][b])) / 3.6e6
-        table.append({
-            "vm_sched": vm_sched,
-            "pm_sched": pm_sched,
-            "energy_kwh": it_kwh,
-            # per-VM Eq. 6 meters: the share of IT energy the jobs actually
-            # drew, vs the idle/overhead waste a better policy could shed
-            "job_kwh": job_kwh,
-            "idle_kwh": float(readings["vm_unattributed"][b]) / 3.6e6,
-            "hvac_kwh": float(readings["hvac"][b]) / 3.6e6,
-            "makespan_s": float(res.t_end[b]),
-            "jobs_done": int(done.sum()),
-            "jobs_rejected": int(res.rejected[b].sum()),
-            "mean_completion_s": float(
-                jnp.where(done, completion, 0.0).sum()
-                / jnp.maximum(done.sum(), 1)),
-            "events": int(res.n_events[b]),
-        })
-    return table
+    return tournament.run(spec, trace, fleet_params(),
+                          schedulers=schedulers, sharded=sharded).rows
 
 
 def default_job_mix(cells: dict, *, n_jobs: int = 24, seed: int = 0

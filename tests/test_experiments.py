@@ -1,0 +1,270 @@
+"""The sweep-experiment layer (repro.experiments): device sharding,
+Pareto frontiers, trace ensembles, scheduler tournaments.
+
+Run with ``XLA_FLAGS=--xla_force_host_platform_device_count=2`` to exercise
+the real ``shard_map`` path in-process; without it the same tests cover the
+single-device fallback, and a subprocess test still forces the 2-device
+topology either way (the parent pytest process must keep its default device
+count — see tests/test_multidevice.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core.trace import synthetic_trace
+from repro.experiments import ensemble, pareto, shard, tournament
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+
+def _cloud(**kw):
+    base = dict(n_pm=2, n_vm=16, pm_cores=4.0, net_bw=100.0, repo_bw=200.0,
+                image_mb=100.0, boot_work=4.0, latency_s=0.0)
+    base.update(kw)
+    return engine.make_cloud(**base)
+
+
+def _sweep_inputs(n_points=4):
+    spec, base = _cloud()
+    trace = synthetic_trace(20, parallel=5, seed=0)
+    points = [dataclasses.replace(base,
+                                  net_bw=jnp.float32(50.0 + 25.0 * i),
+                                  boot_work=jnp.float32(2.0 + i))
+              for i in range(n_points)]
+    return spec, trace, points
+
+
+def _assert_results_equal(a: engine.CloudResult, b: engine.CloudResult):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ---------------------------------------------------------------- sharding
+
+def test_sharded_matches_unsharded_bitwise():
+    """shard_map over the batch axis must be bit-identical to the plain
+    vmap — vmap lanes are independent, sharding only moves them.  (With one
+    device this exercises the documented fallback; the subprocess test
+    below always exercises the 2-device mesh.)"""
+    spec, trace, points = _sweep_inputs(4)
+    params = engine.stack_params(points)
+    ref = engine.simulate_batch(spec, trace, params)
+    got = shard.simulate_batch_sharded(spec, trace, params)
+    _assert_results_equal(ref, got)
+    # the engine-side entry point is the same path
+    _assert_results_equal(ref, engine.simulate_batch_sharded(
+        spec, trace, params))
+
+
+def test_sharded_two_devices_subprocess():
+    """Forced 2-device CPU topology: the real shard_map program, bitwise
+    equal to the unsharded result, using both devices."""
+    code = """
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import engine
+from repro.core.trace import synthetic_trace
+from repro.experiments import shard
+
+assert jax.device_count() == 2, jax.devices()
+spec, base = engine.make_cloud(n_pm=2, n_vm=16, pm_cores=4.0, net_bw=100.0,
+                               repo_bw=200.0, image_mb=100.0, boot_work=4.0,
+                               latency_s=0.0)
+trace = synthetic_trace(20, parallel=5, seed=0)
+points = [dataclasses.replace(base, net_bw=jnp.float32(50.0 + 25.0 * i),
+                              boot_work=jnp.float32(2.0 + i))
+          for i in range(4)]
+params = engine.stack_params(points)
+assert shard.shard_count(4) == 2
+ref = engine.simulate_batch(spec, trace, params)
+got = shard.simulate_batch_sharded(spec, trace, params)
+for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+# the result really lives on the 2-device mesh
+assert len(got.t_end.sharding.device_set) == 2, got.t_end.sharding
+print("SHARDED_BITWISE_OK")
+"""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=2",
+               PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=560)
+    assert "SHARDED_BITWISE_OK" in r.stdout, r.stdout + r.stderr[-2000:]
+
+
+def test_shard_count_largest_divisor():
+    assert shard.shard_count(8, 4) == 4
+    assert shard.shard_count(6, 4) == 3   # largest divisor that fits
+    assert shard.shard_count(7, 4) == 1   # prime batch -> fallback
+    assert shard.shard_count(2, 8) == 2   # never more shards than points
+
+
+def test_batch_size_validates():
+    spec, trace, points = _sweep_inputs(3)
+    params = engine.stack_params(points)
+    assert shard.batch_size(spec, trace, params) == 3
+    with pytest.raises(ValueError, match="stack_params"):
+        shard.batch_size(spec, trace, points[0])
+
+
+# ------------------------------------------------------------------ pareto
+
+def test_pareto_front_dominance_invariant():
+    """Frontier points are mutually non-dominated; every off-frontier point
+    is strictly dominated by some frontier point."""
+    rng = np.random.RandomState(3)
+    costs = rng.uniform(0.0, 1.0, size=(64, 2))
+    mask = pareto.pareto_front(costs)
+    assert mask.any()
+    front = costs[mask]
+    for i in range(costs.shape[0]):
+        dominated = ((front <= costs[i]).all(axis=1)
+                     & (front < costs[i]).any(axis=1))
+        if mask[i]:
+            assert not dominated.any(), f"frontier point {i} is dominated"
+        else:
+            assert dominated.any(), (
+                f"non-frontier point {i} not dominated by the frontier")
+
+
+def test_pareto_front_duplicates_and_single():
+    # identical points dominate nothing: both stay on the frontier
+    mask = pareto.pareto_front([[1.0, 2.0], [1.0, 2.0], [2.0, 3.0]])
+    assert mask.tolist() == [True, True, False]
+    assert pareto.pareto_front([[5.0, 5.0]]).tolist() == [True]
+
+
+def test_pareto_sweep_end_to_end():
+    spec, _, _ = _sweep_inputs()
+    # sparse long-gap trace: always-on burns idle power between arrivals,
+    # on-demand pays a boot delay instead — a genuine energy/makespan
+    # trade-off, so both cells must survive on the frontier
+    trace = engine.Trace(
+        arrival=jnp.asarray([0.0, 4000.0, 8000.0], jnp.float32),
+        cores=jnp.asarray([4.0, 4.0, 4.0], jnp.float32),
+        work=jnp.asarray([800.0, 800.0, 800.0], jnp.float32))
+    base = engine.CloudParams.for_spec(spec, pm_cores=4.0, boot_work=4.0)
+    points = pareto.param_grid(base, pm_sched=["alwayson", "ondemand"])
+    labels = pareto.grid_labels(pm_sched=["alwayson", "ondemand"])
+    res = pareto.sweep(spec, trace, points, labels=labels)
+    assert len(res.rows) == 2
+    by = {r["pm_sched"]: r for r in res.rows}
+    assert by["alwayson"]["energy_kwh"] > by["ondemand"]["energy_kwh"]
+    assert by["alwayson"]["makespan_s"] < by["ondemand"]["makespan_s"]
+    assert all(r["on_frontier"] for r in res.rows)
+    assert sorted(res.frontier.tolist()) == [0, 1]
+    # frontier rows always contain the minimal-energy point
+    emin = min(res.rows, key=lambda r: r["energy_kwh"])
+    assert emin["on_frontier"]
+
+
+def test_param_grid_shapes_and_validation():
+    spec, base = _cloud()
+    pts = pareto.param_grid(base, net_bw=[1.0, 2.0], boot_work=[3.0, 4.0, 5.0])
+    assert len(pts) == 6
+    assert float(pts[0].net_bw) == 1.0 and float(pts[5].boot_work) == 5.0
+    labels = pareto.grid_labels(net_bw=[1.0, 2.0], boot_work=[3.0, 4.0, 5.0])
+    assert labels[5] == {"net_bw": 2.0, "boot_work": 5.0}
+    with pytest.raises(TypeError, match="unknown CloudParams"):
+        pareto.param_grid(base, nonsense=[1])
+
+
+# ---------------------------------------------------------------- ensemble
+
+def test_ensemble_reproducible_and_sane():
+    """Fixed seeds => bit-identical stats across runs; CI half-widths are
+    non-negative and the mean lies inside the replicate range."""
+    spec, base = _cloud(n_pm=2, n_vm=64, pm_cores=64.0)
+    traces = ensemble.gwa_ensemble("das2", 24, 4, pm_cores=64.0, seed0=5)
+    points = [base, dataclasses.replace(base, pm_sched="ondemand")]
+    labels = [{"pm_sched": "alwayson"}, {"pm_sched": "ondemand"}]
+    r1 = ensemble.run_ensemble(spec, traces, points, labels=labels)
+    r2 = ensemble.run_ensemble(spec, traces, points, labels=labels)
+    assert r1.rows == r2.rows
+    assert len(r1.rows) == 2
+    for row in r1.rows:
+        assert row["replicates"] == 4
+        for m in ("energy_kwh", "job_kwh", "idle_kwh", "makespan_s"):
+            assert row[f"{m}_std"] >= 0.0
+            assert row[f"{m}_ci"] >= 0.0
+    # per-policy means must match the per-replicate engine results: policy
+    # p's replicates occupy batch rows [p*R, (p+1)*R)
+    energies = np.asarray(
+        r1.result.readings(spec)["iaas_total"], np.float64) / 3.6e6
+    for p, row in enumerate(r1.rows):
+        v = energies[p * 4:(p + 1) * 4]
+        np.testing.assert_allclose(row["energy_kwh_mean"], v.mean(),
+                                   rtol=1e-12)
+        assert v.min() <= row["energy_kwh_mean"] <= v.max()
+
+
+def test_ensemble_validates_inputs():
+    spec, base = _cloud()
+    traces = ensemble.gwa_ensemble("das2", 10, 2, pm_cores=4.0)
+    with pytest.raises(ValueError, match="confidence"):
+        ensemble.run_ensemble(spec, traces, [base], confidence=0.5)
+    with pytest.raises(ValueError, match="replicates"):
+        ensemble.run_ensemble(spec, traces[:1], [base])
+
+
+# -------------------------------------------------------------- tournament
+
+def test_tournament_matches_sequential_cells():
+    """The generalised grid gives the same per-cell numbers as sequential
+    single-scenario simulate calls."""
+    spec, trace, _ = _sweep_inputs()
+    base = engine.CloudParams.for_spec(spec, pm_cores=4.0, boot_work=4.0)
+    res = tournament.run(spec, trace, base)
+    assert len(res.rows) == 6  # full 3x2 grid by default
+    for row in res.rows:
+        single = engine.simulate(spec, trace, params=dataclasses.replace(
+            base, vm_sched=row["vm_sched"], pm_sched=row["pm_sched"]))
+        np.testing.assert_allclose(
+            row["energy_kwh"],
+            float(single.meters.total.energy) / 3.6e6, rtol=1e-6)
+        np.testing.assert_allclose(row["makespan_s"], float(single.t_end),
+                                   rtol=1e-6)
+        assert row["jobs_rejected"] == int(single.rejected.sum())
+
+
+def test_tournament_custom_grid_and_codes():
+    spec, trace, _ = _sweep_inputs()
+    base = engine.CloudParams.for_spec(spec, pm_cores=4.0)
+    grid = tournament.scheduler_grid(("firstfit",), (0, 1))
+    res = tournament.run(spec, trace, base, schedulers=grid)
+    assert [(r["vm_sched"], r["pm_sched"]) for r in res.rows] == [
+        ("firstfit", "alwayson"), ("firstfit", "ondemand")]
+
+
+def test_evaluate_schedulers_routes_through_tournament(monkeypatch):
+    """repro.sched's matrix is the tournament experiment, not a parallel
+    code path."""
+    from repro.experiments import tournament as tm
+    from repro.sched import energy_aware as ea
+    calls = []
+    orig = tm.run
+
+    def spy(*args, **kwargs):
+        calls.append(1)
+        return orig(*args, **kwargs)
+
+    monkeypatch.setattr(tm, "run", spy)
+    cells = {("a", "s"): ea.CellPerf("a", "s", 1.0, 0.5, 0.2)}
+    tr = ea.job_trace([ea.Job("a", "s", steps=50)], cells)
+    rows = ea.evaluate_schedulers(tr, n_pods=2)
+    assert calls, "evaluate_schedulers must run via tournament.run"
+    assert len(rows) == 6
+    for row in rows:  # the fleet report keeps its meter-stack columns
+        for key in ("energy_kwh", "job_kwh", "idle_kwh", "hvac_kwh",
+                    "makespan_s", "jobs_done", "events"):
+            assert key in row
