@@ -1,0 +1,90 @@
+"""Consolidation-scheduler benchmark — the in-loop cross-layer policy's
+cost and payoff (repro.core.loop.consolidate).
+
+Workload: waves of 16 simultaneous 16-core tasks on a 4x64-core cloud.
+Under first-fit each wave packs 4 tasks per PM; 12 are short and 4 —
+one per PM — are long stragglers, so once the shorts drain every PM hosts
+a single idle-dominated VM.  On-demand must keep all 4 machines up for
+the whole straggler tail; consolidate migrates the stragglers onto one
+host and powers the donors down.  The whole PM state-scheduler axis
+(always-on / on-demand / consolidate) x two VM schedulers runs as one
+sharded tournament batch — scheduler identity is ``CloudParams`` data, so
+the consolidation cells ride the same compiled program as the paper's
+baseline policies.  Rows report per-cell IT energy, the job-attributed
+share and the unattributed idle (the reading the policy exists to shed)
+plus a timing summary, snapshotted as ``BENCH_consolidation.json`` so both
+the policy's energy ordering and the staged pipeline's event throughput
+are tracked per PR."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine
+from repro.experiments import shard, tournament
+
+VM_SCHEDS = ("firstfit", "smallestfirst")
+PM_SCHEDS = ("alwayson", "ondemand", "consolidate")
+N_PM, PM_CORES, TASK_CORES = 4, 64.0, 16.0
+SHORT_S, TAIL_S, WAVE_GAP_S = 200.0, 4000.0, 5000.0
+
+
+def straggler_trace(waves: int) -> engine.Trace:
+    arrival, cores, work = [], [], []
+    for w in range(waves):
+        t0 = w * WAVE_GAP_S
+        for i in range(16):
+            arrival.append(t0 + 0.01 * i)
+            cores.append(TASK_CORES)
+            # first-fit packs tasks 4i..4i+3 onto PM i: position 3 of each
+            # quartet is the long straggler, one per machine
+            runtime = TAIL_S if (i % 4) == 3 else SHORT_S
+            work.append(TASK_CORES * runtime)
+    return engine.Trace(arrival=jnp.asarray(arrival, jnp.float32),
+                        cores=jnp.asarray(cores, jnp.float32),
+                        work=jnp.asarray(work, jnp.float32))
+
+
+def run(quick=True) -> list[dict]:
+    waves = 3 if quick else 24
+    trace = straggler_trace(waves)
+    spec, base = engine.make_cloud(n_pm=N_PM, n_vm=max(int(trace.n), 8),
+                                   pm_cores=PM_CORES, max_events=4_000_000)
+    grid = tournament.scheduler_grid(VM_SCHEDS, PM_SCHEDS)
+
+    t0 = time.time()
+    res = tournament.run(spec, trace, base, schedulers=grid)
+    jax.block_until_ready(res.result.t_end)
+    compile_wall = time.time() - t0
+
+    t0 = time.time()
+    res = tournament.run(spec, trace, base, schedulers=grid)
+    jax.block_until_ready(res.result.t_end)
+    wall = time.time() - t0
+
+    events = int(np.asarray(res.result.n_events).sum())
+    by_pm = {}
+    for r in res.rows:
+        by_pm.setdefault(r["pm_sched"], []).append(r["energy_kwh"])
+    summary = {
+        "name": "consolidation_tournament",
+        "points": len(grid),
+        "tasks": int(trace.n),
+        "n_devices": jax.device_count(),
+        "shards": shard.shard_count(len(grid)),
+        "compile_wall_s": round(compile_wall, 4),
+        "wall_s": round(wall, 4),
+        "events": events,
+        "events_per_s": round(events / max(wall, 1e-9), 1),
+        # policy payoff at a glance: mean IT kWh per PM policy (consolidate
+        # must sit below ondemand below alwayson on this workload)
+        "mean_kwh": {k: round(float(np.mean(v)), 3)
+                     for k, v in by_pm.items()},
+    }
+    rows = [summary]
+    for r in res.rows:
+        rows.append({"name": "consolidation_cell", **r})
+    return rows

@@ -19,9 +19,10 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     quick = not args.full
 
-    from benchmarks import (energy_overhead, ensemble_bench, pareto_bench,
-                            roofline, scaling, sched_bench, sharing_perf,
-                            sweep_bench, traces_bench, validation)
+    from benchmarks import (consolidation_bench, energy_overhead,
+                            ensemble_bench, pareto_bench, roofline, scaling,
+                            sched_bench, sharing_perf, sweep_bench,
+                            traces_bench, validation)
     modules = {
         "validation": validation,        # Fig 7/8/9/10
         "sharing_perf": sharing_perf,    # Fig 12 / Table 3
@@ -33,6 +34,7 @@ def main(argv=None) -> int:
         "sweep": sweep_bench,            # batched 8-point scenario sweep
         "pareto": pareto_bench,          # Pareto-front experiment (sharded)
         "ensemble": ensemble_bench,      # trace-ensemble experiment (sharded)
+        "consolidation": consolidation_bench,  # in-loop migration policy
     }
     if args.only:
         keep = set(args.only.split(","))
@@ -52,10 +54,12 @@ def main(argv=None) -> int:
             failures += 1
         wall = time.time() - t0
         (outdir / f"{name}.json").write_text(json.dumps(rows, indent=1))
-        if name in ("sweep", "pareto", "ensemble") and status == "ok":
+        if (name in ("sweep", "pareto", "ensemble", "consolidation")
+                and status == "ok"):
             # stable perf-trajectory artifacts: events/sec of the batched
-            # sweep and of the two sharded experiment kinds
-            # (only on success — never clobber the trajectory with an error)
+            # sweep, the sharded experiment kinds and the consolidation
+            # tournament (only on success — never clobber the trajectory
+            # with an error)
             (outdir / f"BENCH_{name}.json").write_text(
                 json.dumps(rows, indent=1))
         print(f"== {name} [{status}] ({wall:.1f}s) " + "=" * 40)

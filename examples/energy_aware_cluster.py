@@ -5,15 +5,19 @@ Reads the dry-run roofline artifacts (experiments/dryrun/) to characterise
 each (arch x shape) job, builds a mixed fleet trace, runs the scheduler
 *tournament* (the paper's matrix via repro.experiments.tournament), then a
 trace-*ensemble* experiment — mean ± CI per policy over seed-perturbed job
-mixes (docs/experiments.md) — and finishes with a live-migration
-consolidation demo (the PM-state-scheduler use case of §3.5.1).
+mixes (docs/experiments.md) — then a live-migration consolidation demo
+(the in-loop ``pm_sched="consolidate"`` policy, DESIGN.md §5) and a
+per-tenant bill from the per-VM Eq. 6 meters.
 
 Run:  PYTHONPATH=src python examples/energy_aware_cluster.py
 """
+import dataclasses
+
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import engine
+from repro.core.energy import tenant_energy
 from repro.experiments import ensemble
 from repro.sched import energy_aware as ea
 
@@ -79,19 +83,42 @@ for r in er.rows:
           f"{r['makespan_s_mean']/3600:5.2f} ± {r['makespan_s_ci']/3600:4.2f} h")
 
 # ---------------------------------------------------------------- migration
-print("\n=== consolidation via live migration " + "=" * 29)
+print("\n=== in-loop consolidation via live migration " + "=" * 21)
+# Two 100-core machines.  Short wide tasks pin a long 25-core straggler to
+# PM1; once they drain, PM1 idles under one small VM.  The consolidate PM
+# scheduler watches the per-PM idle meter inside the engine loop, migrates
+# the straggler to PM0 and powers the donor down — no manual
+# start_migration call, and the whole policy axis is one batch.
 spec = engine.CloudSpec(n_pm=2, n_vm=8)
-params = engine.CloudParams(pm_cores=64.0, vm_mem_mb=2048.0)
-tr = engine.Trace(arrival=jnp.asarray([0.0, 0.0]),
-                  cores=jnp.asarray([16.0, 16.0]),
-                  work=jnp.asarray([16.0 * 400, 16.0 * 400]))
-st = engine.simulate(spec, tr, params=params, t_stop=50.0).state
-# both VMs landed on PM0? then nothing to consolidate; move VM1 -> PM0
-hosts = np.asarray(st.vm_host[:2])
-vstage = np.asarray(st.vstage[:2])
-print(f"t=50s: vm hosts={hosts.tolist()} stages={vstage.tolist()}")
-st2 = engine.start_migration(spec, params, st, 1, 0)
-res = engine.simulate(spec, tr, params=params, state=st2)
-print(f"after migration + completion: makespan {float(res.t_end):.0f}s, "
-      f"completions {np.asarray(res.completion)[:2].round(0).tolist()}")
-print("consolidated: PM1 can now be switched off by a PM scheduler")
+ctrace = engine.Trace(
+    arrival=jnp.asarray([0.0, 0.01, 0.02, 230.0], jnp.float32),
+    cores=jnp.asarray([60.0, 35.0, 70.0, 25.0], jnp.float32),
+    work=jnp.asarray([60e3 * 2, 7e3, 14e3, 50e3], jnp.float32))
+cbase = engine.CloudParams(pm_cores=100.0)
+pols = ("alwayson", "ondemand", "consolidate")
+cres = engine.simulate_batch(
+    spec, ctrace,
+    engine.stack_params([dataclasses.replace(cbase, pm_sched=p)
+                         for p in pols]))
+crd = cres.readings(spec)
+for i, p in enumerate(pols):
+    print(f"  {p:12s} {float(crd['iaas_total'][i])/3.6e6:7.3f} kWh  "
+          f"idle {float(crd['vm_unattributed'][i])/3.6e6:6.3f} kWh  "
+          f"makespan {float(cres.t_end[i]):7.0f} s")
+print("consolidate migrates the straggler off PM1 and switches the donor "
+      "off for the tail")
+
+# ------------------------------------------------------------------ billing
+print("\n=== per-tenant billing from the Eq. 6 meters " + "=" * 21)
+# the per-VM adjusted-aggregation meters are billing-grade: each tenant
+# pays the PM power its own VMs induced; unattributed idle stays with the
+# operator (docs/experiments.md §8)
+rd_one = {k: v[2] for k, v in crd.items()}  # the consolidated run's row
+owner = np.full(spec.n_vm, -1, np.int32)
+owner[:4] = [0, 0, 1, 1]   # tasks dispatch in arrival order -> slots 0..3
+PRICE = 0.12               # $/kWh
+bill = np.asarray(tenant_energy(rd_one, owner, 2)) / 3.6e6
+for t in range(2):
+    print(f"  tenant {t}: {bill[t]:8.3f} kWh -> ${PRICE * bill[t]:7.2f}")
+print(f"  operator idle (unbilled): "
+      f"{float(rd_one['vm_unattributed'])/3.6e6:.3f} kWh")

@@ -262,7 +262,7 @@ class MeterTopology:
         names = [m.name for m in self.indirect]
         assert len(set(names)) == len(names), (
             f"duplicate indirect meter names: {names}")
-        reserved = {"pm", "pm_sampled", "iaas_total", "vm",
+        reserved = {"pm", "pm_idle", "pm_sampled", "iaas_total", "vm",
                     "vm_unattributed"}
         reserved |= {f"group{g}" for g in range(len(self.pm_groups))}
         clash = reserved & set(names)
@@ -338,6 +338,11 @@ class MeterState(NamedTuple):
     group: MeterAccum       # [G] hierarchical PM-group aggregators
     total: MeterAccum       # []  whole-IaaS aggregate
     indirect: MeterAccum    # [K] indirect meters
+    pm_idle: MeterAccum     # [P] per-PM idle-component draw (state baseline
+    #                         p_min — the work-unattributable share a
+    #                         consolidation policy targets; its last_power
+    #                         is the live signal repro.core.loop.consolidate
+    #                         reads)
 
     @staticmethod
     def zero(topology: MeterTopology, n_pm: int, n_vm: int) -> "MeterState":
@@ -348,6 +353,7 @@ class MeterState(NamedTuple):
             group=MeterAccum.zero((topology.n_groups,)),
             total=MeterAccum.zero(()),
             indirect=MeterAccum.zero((topology.n_indirect,)),
+            pm_idle=MeterAccum.zero((n_pm,)),
         )
 
 
@@ -387,6 +393,9 @@ def observe(topology: MeterTopology, mparams: MeterParams, view: SimView,
     pm = meters.pm.integrate(view.pm_power, dt)
     pm_sampled = meters.pm_sampled + jnp.where(
         view.tick, view.pm_power * view.period, 0.0)
+    # per-PM idle-component meter: the state baseline (p_min) every PM draws
+    # regardless of delivered work — the reading consolidation policies watch
+    pm_idle = meters.pm_idle.integrate(view.pm_idle, dt)
 
     it_power = jnp.sum(view.pm_power)
     total = meters.total.integrate(it_power, dt)
@@ -417,7 +426,7 @@ def observe(topology: MeterTopology, mparams: MeterParams, view: SimView,
         indirect = meters.indirect
 
     return MeterState(pm=pm, pm_sampled=pm_sampled, vm=vm, group=group,
-                      total=total, indirect=indirect)
+                      total=total, indirect=indirect, pm_idle=pm_idle)
 
 
 def meter_readings(topology: MeterTopology, meters: MeterState
@@ -426,6 +435,7 @@ def meter_readings(topology: MeterTopology, meters: MeterState
     and batched results (meter axes are trailing)."""
     out = {
         "pm": meters.pm.energy,
+        "pm_idle": meters.pm_idle.energy,
         "pm_sampled": meters.pm_sampled,
         "iaas_total": meters.total.energy,
     }
@@ -438,3 +448,23 @@ def meter_readings(topology: MeterTopology, meters: MeterState
     for k, m in enumerate(topology.indirect):
         out[m.name] = meters.indirect.energy[..., k]
     return out
+
+
+def tenant_energy(readings: dict, vm_tenant, n_tenants: int) -> jax.Array:
+    """Per-tenant attributed energy (J) from the per-VM Eq. 6 meters.
+
+    ``vm_tenant`` is ``i32[V]`` mapping each VM slot to its owning tenant
+    (``-1``: unowned slots, dropped).  Sums the ``readings["vm"]`` meters
+    by owner — the billing-grade attribution the paper's adjusted
+    aggregation exists for: each tenant pays the PM power its own VMs
+    induced (variable share by delivered rate + its slice of the idle
+    draw), while ``readings["vm_unattributed"]`` stays with the operator.
+    Single-scenario (unbatched) readings; VM slots must not be reused
+    across tenants within the billing window (size ``n_vm`` accordingly).
+    """
+    vm = jnp.asarray(readings["vm"], jnp.float32)
+    owner = jnp.asarray(vm_tenant, jnp.int32)
+    owned = owner >= 0
+    seg = jnp.where(owned, owner, n_tenants)  # n_tenants = drop bucket
+    return jax.ops.segment_sum(jnp.where(owned, vm, 0.0), seg,
+                               num_segments=n_tenants + 1)[:n_tenants]

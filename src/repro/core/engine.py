@@ -25,37 +25,36 @@ paper's "fast evaluation of many scheduling scenarios" goal (§1, §4.3).
 Batch-axis semantics and the device-sharding layout are in DESIGN.md §4;
 the first-class experiment kinds live in :mod:`repro.experiments`.
 
-The simulation semantics are unchanged by the split:
+The loop body itself is a **staged subsystem pipeline**
+(:mod:`repro.core.loop`, DESIGN.md §5): pure stage functions over the
+explicit :class:`CloudState` / ``StageCtx`` protocol —
 
-* **Timed / time-jump control (§3.1)** — every iteration computes the event
-  horizon ``dt = min(next completion, next task arrival, PM power-state end,
-  allocation expiry, meter tick, t_stop)`` and advances the clock by exactly
-  that; rates are piecewise-constant between events so the jump is exact.
-* **Unified resource sharing (§3.2)** — CPU, network and disk live in one
-  flat spreader space (:class:`repro.core.machine.SpreaderLayout`); the
-  low-level sharing logic is looked up in :data:`repro.core.fairshare.SCHEDULERS`
-  by ``spec.scheduler`` and assigns all rates at once.
-* **Energy metering (§3.3)** — a declarative *meter stack*: the spec-static
-  :class:`~repro.core.energy.MeterTopology` (``spec.meters``) says which
-  meters exist, the batchable :class:`~repro.core.energy.MeterParams`
-  (``params.meter``) carries their coefficients, and every horizon the body
-  builds one :class:`~repro.core.energy.SimView` and calls the pure
-  :func:`~repro.core.energy.observe` hook.  The default stack yields per-PM
-  direct meters (exact piecewise integration — our improvement), per-VM
-  Eq. 6 adjusted aggregation through the influence groups, the whole-IaaS
-  aggregate, and a PUE-style HVAC indirect meter, all under
-  ``CloudResult.meters``; the paper's periodic *sampled* metering runs when
-  ``params.metering_period > 0`` (reproduces the Fig. 16/17 overhead
-  trade-off).  The period is data: one program covers metered and
-  meter-less points via ``jnp.isfinite`` masking.
-* **Infrastructure (§3.4)** — PM power-state machine (Table 1/2, incl. the
-  *hidden consumer* complex model), VM lifecycle (Fig. 6) where each VM slot
-  rewrites its single consumption in place: image transfer -> boot -> task
-  (-> optional migration).
-* **Management (§3.5)** — first-fit / non-queuing / smallest-first VM
-  schedulers and always-on / on-demand PM schedulers as masked vector
-  decisions selected by ``params.vm_sched`` / ``params.pm_sched`` integer
-  codes — the whole scheduler matrix batches through one compile.
+* **advance** — timed/time-jump control (§3.1) + unified resource sharing
+  (§3.2): every iteration computes the event horizon ``dt = min(next
+  completion, next task arrival, PM power-state end, allocation expiry,
+  meter tick, t_stop)`` and advances the clock by exactly that; rates are
+  piecewise-constant between events so the jump is exact.
+* **observe** — energy metering (§3.3): the declarative *meter stack*
+  (spec-static :class:`~repro.core.energy.MeterTopology` in
+  ``spec.meters``, batchable :class:`~repro.core.energy.MeterParams` in
+  ``params.meter``); every horizon the stage builds one
+  :class:`~repro.core.energy.SimView` and calls the pure
+  :func:`~repro.core.energy.observe` hook.  The default stack yields
+  per-PM direct + per-PM idle-component meters, per-VM Eq. 6 adjusted
+  aggregation, the whole-IaaS aggregate and a PUE-style HVAC indirect
+  meter; the paper's periodic *sampled* metering runs when
+  ``params.metering_period > 0``.
+* **vm_lifecycle / pm_power** — infrastructure (§3.4): the VM lifecycle
+  (Fig. 6; each VM slot rewrites its single consumption in place: image
+  transfer -> boot -> task -> optional migration) and the PM power-state
+  machine (Table 1/2, incl. the *hidden consumer* complex model).
+* **pm_sched / vm_sched** — management (§3.5): policy hooks reading the
+  fresh ``SimView`` and live meter state.  First-fit / non-queuing /
+  smallest-first VM schedulers and always-on / on-demand / *consolidate*
+  PM schedulers as masked vector decisions selected by ``params.vm_sched``
+  / ``params.pm_sched`` integer codes — the whole scheduler matrix batches
+  through one compile.  ``consolidate`` adds in-loop live migration driven
+  by the per-PM idle meter (:mod:`repro.core.loop.consolidate`).
 
 The per-entity capacities (PMs ``P``, VM slots ``V``, tasks ``T``) are
 static; overflow is reported, never silent.
@@ -69,30 +68,25 @@ from typing import NamedTuple, Sequence
 import jax
 import jax.numpy as jnp
 
+from . import loop
 from . import machine as mc
-from .arrays import KIND_BOOT, KIND_HIDDEN, KIND_IMAGE_XFER, KIND_TASK
-from .energy import (MODEL_LINEAR, PM_OFF, PM_RUNNING, PM_SWITCHING_OFF,
-                     PM_SWITCHING_ON, MeterParams, MeterState, MeterTopology,
-                     PowerStateTable, SimView, instantaneous_power, kahan_add,
-                     meter_readings, observe)
+from .energy import (PM_OFF, PM_RUNNING, PM_SWITCHING_OFF, PM_SWITCHING_ON,
+                     MeterParams, MeterState, MeterTopology, PowerStateTable,
+                     meter_readings)
 from .fairshare import SCHEDULERS
-from .influence import coupled_vm_counts, influence_labels
+from .loop.consolidate import migration_update
+from .loop.state import (BIG as _BIG, KIND_MIGRATE, PM_ALWAYSON,
+                         PM_CONSOLIDATE, PM_ONDEMAND, PM_SCHEDULERS,
+                         TASK_ACTIVE, TASK_DONE, TASK_PENDING, TASK_REJECTED,
+                         VM_FIRSTFIT, VM_NONQUEUING, VM_SCHEDULERS,
+                         VM_SMALLESTFIRST, CloudState)
 
-KIND_MIGRATE = 5
-
-_BIG = jnp.float32(3.0e38)
-
-# Task states
-TASK_PENDING = 0   # submitted (queued once arrival <= t)
-TASK_ACTIVE = 1    # bound to a VM
-TASK_DONE = 2
-TASK_REJECTED = 3
-
-# VM/PM scheduler codes: index into these tuples == the CloudParams code.
-VM_SCHEDULERS = ("firstfit", "nonqueuing", "smallestfirst")
-PM_SCHEDULERS = ("alwayson", "ondemand")
-VM_FIRSTFIT, VM_NONQUEUING, VM_SMALLESTFIRST = range(3)
-PM_ALWAYSON, PM_ONDEMAND = range(2)
+__all__ = [
+    "CloudSpec", "CloudParams", "CloudState", "CloudResult", "Trace",
+    "make_cloud", "stack_params", "stack_traces", "init_state", "simulate",
+    "simulate_batch", "simulate_batch_sharded", "start_migration",
+    "make_allocation", "VM_SCHEDULERS", "PM_SCHEDULERS",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -171,6 +165,9 @@ class CloudParams:
     hidden_work_off: object = 2.4  # core-s consumed while switching off
     vm_sched: object = 0           # code into VM_SCHEDULERS (str accepted)
     pm_sched: object = 0           # code into PM_SCHEDULERS (str accepted)
+    consolidate_idle_frac: object = 0.6  # consolidation trigger: a RUNNING PM
+    #                                whose live idle-meter share of its draw
+    #                                exceeds this is an evacuation source
     power: PowerStateTable = None  # per-power-state consumption model
     meter: MeterParams = None      # meter-stack coefficients (spec.meters)
 
@@ -238,58 +235,6 @@ def stack_traces(traces: Sequence[Trace]) -> Trace:
     return jax.tree.map(lambda *xs: jnp.stack(xs), *traces)
 
 
-class CloudState(NamedTuple):
-    t: jax.Array          # f32 simulated clock
-    t_c: jax.Array        # f32 Kahan compensation for the clock
-    n_events: jax.Array   # i32
-
-    # consumption slots: [0:V] VM flows, [V:V+P] hidden consumers
-    f_pr: jax.Array       # f32[V+P] remaining processing
-    f_total: jax.Array    # f32[V+P] amount at registration
-    f_pl: jax.Array       # f32[V+P] rate limit
-    f_prov: jax.Array     # i32[V+P]
-    f_cons: jax.Array     # i32[V+P]
-    f_active: jax.Array   # bool[V+P]
-    f_release: jax.Array  # f32[V+P] latency gate
-    f_kind: jax.Array     # i32[V+P]
-
-    task_state: jax.Array  # i32[T]
-    task_vm: jax.Array     # i32[T]
-    t_done: jax.Array      # f32[T]
-
-    vstage: jax.Array      # i32[V]
-    vm_task: jax.Array     # i32[V]
-    vm_host: jax.Array     # i32[V]
-    vm_cores: jax.Array    # f32[V]
-    vm_expiry: jax.Array   # f32[V]  (ALLOCATED slots; inf otherwise)
-    vm_saved_pr: jax.Array  # f32[V] remaining task work across suspend/migrate
-    vm_mig_dst: jax.Array  # i32[V]
-
-    pstate: jax.Array      # i32[P]
-    pstate_end: jax.Array  # f32[P] (simple model transition deadline)
-    free_cores: jax.Array  # f32[P]
-
-    meters: MeterState     # the meter stack's accumulated readings (§3.3)
-    meter_next: jax.Array  # f32 next sample tick (inf when disabled)
-    processed: jax.Array   # f32[S] provider-side utilisation counters
-
-    overflow: jax.Array    # bool — VM slot pool exhausted at some dispatch
-    running: jax.Array     # bool
-
-    # Pre-meter-stack views (the default stack's per-PM direct meters).
-    @property
-    def energy_hi(self) -> jax.Array:
-        return self.meters.pm.energy_hi
-
-    @property
-    def energy_lo(self) -> jax.Array:
-        return self.meters.pm.energy_lo
-
-    @property
-    def energy_sampled(self) -> jax.Array:
-        return self.meters.pm_sampled
-
-
 class CloudResult(NamedTuple):
     state: CloudState
     completion: jax.Array   # f32[T] task completion times (inf: not finished)
@@ -332,6 +277,8 @@ def init_state(spec: CloudSpec, trace: Trace,
     F = V + P
     zf = jnp.zeros((F,), jnp.float32)
     zi = jnp.zeros((F,), jnp.int32)
+    # always-on clouds start running; on-demand and consolidate start off
+    # and wake machines against the queue deficit
     start_running = params.pm_sched == PM_ALWAYSON
     pstate0 = jnp.broadcast_to(
         jnp.where(start_running, PM_RUNNING, PM_OFF), (P,)).astype(jnp.int32)
@@ -361,423 +308,21 @@ def init_state(spec: CloudSpec, trace: Trace,
     )
 
 
-def _spreader_perf(spec: CloudSpec, params: CloudParams,
-                   st: CloudState) -> jax.Array:
-    """perf[S] from machine states (Eq. 5: power state gates processing)."""
-    lay = spec.layout
-    P, V = spec.n_pm, spec.n_vm
-    cpu_cap = params.pm_cores * params.perf_core
-    perf = jnp.zeros((lay.S,), jnp.float32)
-    cpu_on = st.pstate == PM_RUNNING
-    if spec.complex_power:
-        cpu_on = cpu_on | (st.pstate == PM_SWITCHING_ON) | (
-            st.pstate == PM_SWITCHING_OFF)
-    perf = perf.at[lay.cpu0:lay.cpu0 + P].set(
-        jnp.where(cpu_on, cpu_cap, 0.0))
-    net_on = st.pstate != PM_OFF
-    perf = perf.at[lay.netin0:lay.netin0 + P].set(
-        jnp.where(net_on, params.net_bw, 0.0))
-    perf = perf.at[lay.netout0:lay.netout0 + P].set(
-        jnp.where(net_on, params.net_bw, 0.0))
-    perf = perf.at[lay.repo_out].set(params.repo_bw)
-    perf = perf.at[lay.repo_disk].set(params.repo_bw)
-    vm_on = mc.vm_cpu_active(st.vstage) | (st.vstage == mc.VM_INITIAL_TRANSFER)
-    perf = perf.at[lay.vm0:lay.vm0 + V].set(
-        jnp.where(vm_on, jnp.maximum(st.vm_cores, 1.0) * params.perf_core, 0.0))
-    perf = perf.at[lay.hidden0:lay.hidden0 + P].set(
-        jnp.broadcast_to(cpu_cap, (P,)))
-    return perf
-
-
-def _rates(spec: CloudSpec, st: CloudState, perf: jax.Array):
-    thresh = 1e-6 * st.f_total + 1e-9
-    live = st.f_active & (st.t >= st.f_release) & (st.f_pr > thresh)
-    rate_fn = SCHEDULERS[spec.scheduler]
-    r = rate_fn(st.f_prov, st.f_cons, st.f_pl, live, perf,
-                backend=spec.backend, max_iters=spec.max_fill_iters)
-    return r, live, thresh
-
-
-def _sim_view(spec: CloudSpec, params: CloudParams, trace: Trace,
-              st: CloudState, r: jax.Array, live: jax.Array,
-              tick: jax.Array, period: jax.Array) -> SimView:
-    """Build the meter stack's observation surface for the current interval
-    (paper Fig. 7: utilisation counters -> consumption models -> meters).
-
-    Everything is read from the pre-update state: rates are constant over
-    ``[t, t + dt]``, so the view holds for the whole interval.  The per-VM
-    half wires Eq. 6 through :mod:`repro.core.influence`: a VM draws power
-    iff its spreader sits in its host CPU spreader's influence group, and
-    the idle-share divisor is that group's VM count (``|G(s_vm)| - 1``).
-    """
-    lay = spec.layout
-    P, V = spec.n_pm, spec.n_vm
-    table = params.power
-
-    delivered = jax.ops.segment_sum(jnp.where(live, r, 0.0), st.f_prov,
-                                    num_segments=lay.S)
-    cpu_del = delivered[lay.cpu0:lay.cpu0 + P]
-    cpu_cap = jnp.maximum(params.pm_cores * params.perf_core, 1e-30)
-    util = cpu_del / cpu_cap
-    power = instantaneous_power(table, st.pstate, util)
-    p_idle = table.p_min[st.pstate]
-    p_span = jnp.where(table.mode[st.pstate] == MODEL_LINEAR,
-                       table.p_max[st.pstate] - p_idle, 0.0)
-
-    if spec.meters.vm_direct:
-        labels = influence_labels(st.f_prov, st.f_cons, live, lay.S)
-        in_grp, vms_on_host = coupled_vm_counts(
-            labels, lay.cpu0 + st.vm_host, lay.vm0 + jnp.arange(V),
-            st.vm_host, P)
-        vm_rate_frac = (jnp.where(in_grp, r[:V], 0.0)
-                        / jnp.maximum(cpu_del[st.vm_host], 1e-30))
-        vm_host = jnp.where(in_grp, st.vm_host, -1)
-    else:
-        vms_on_host = jnp.zeros((P,), jnp.int32)
-        vm_rate_frac = jnp.zeros((V,), jnp.float32)
-        vm_host = jnp.full((V,), -1, jnp.int32)
-
-    hosted = st.vstage != mc.VM_FREE
-    queued = (st.task_state == TASK_PENDING) & (trace.arrival <= st.t)
-    return SimView(
-        pm_power=power, pm_idle=p_idle, pm_span=p_span, pm_util=util,
-        vm_rate_frac=vm_rate_frac, vm_host=vm_host, vms_on_host=vms_on_host,
-        n_hosted=hosted.sum().astype(jnp.float32),
-        n_queued=queued.sum().astype(jnp.float32),
-        tick=tick, period=period)
-
-
-def _dispatch_loop(spec: CloudSpec, params: CloudParams, trace: Trace,
-                   st: CloudState) -> CloudState:
-    """VM scheduler (§3.5.1): serve the request queue until blocked/empty.
-
-    The scheduler identity is data (``params.vm_sched``): the queue key and
-    the rejection rule are masked selections, so one compiled program covers
-    first-fit, non-queuing and smallest-first."""
-    lay = spec.layout
-    P, V, T = spec.n_pm, spec.n_vm, trace.n
-    is_smallest = jnp.asarray(params.vm_sched) == VM_SMALLESTFIRST
-    is_nonqueue = jnp.asarray(params.vm_sched) == VM_NONQUEUING
-
-    def queued_mask(task_state):
-        return (task_state == TASK_PENDING) & (trace.arrival <= st.t)
-
-    def cond(s):
-        st2, progressed = s
-        return progressed
-
-    def body(s):
-        st2, _ = s
-        queued = queued_mask(st2.task_state)
-        any_q = queued.any()
-        key = jnp.where(queued,
-                        jnp.where(is_smallest, trace.cores, trace.arrival),
-                        jnp.inf)
-        head = jnp.argmin(key).astype(jnp.int32)
-        h_cores = trace.cores[head]
-
-        oversize = h_cores > params.pm_cores  # can never fit -> reject always
-        fit = mc.pm_accepting(st2.pstate) & (st2.free_cores >= h_cores)
-        any_fit = fit.any()
-        pm = jnp.argmax(fit).astype(jnp.int32)  # first fit
-        vfree = st2.vstage == mc.VM_FREE
-        any_v = vfree.any()
-        v = jnp.argmax(vfree).astype(jnp.int32)
-
-        do_reject = any_q & (oversize | (is_nonqueue & ~any_fit))
-        do_dispatch = any_q & ~do_reject & any_fit & any_v
-        overflow = any_q & ~do_reject & any_fit & ~any_v
-
-        # --- reject head ---
-        task_state = st2.task_state.at[head].set(
-            jnp.where(do_reject, TASK_REJECTED, st2.task_state[head]))
-
-        # --- dispatch head: VM -> INITIAL_TRANSFER, flow slot = image xfer ---
-        def wv(arr, val):
-            return arr.at[v].set(jnp.where(do_dispatch, val, arr[v]))
-
-        st2 = st2._replace(
-            task_state=task_state.at[head].set(
-                jnp.where(do_dispatch, TASK_ACTIVE, task_state[head])),
-            task_vm=st2.task_vm.at[head].set(
-                jnp.where(do_dispatch, v, st2.task_vm[head])),
-            vstage=wv(st2.vstage, mc.VM_INITIAL_TRANSFER),
-            vm_task=wv(st2.vm_task, head),
-            vm_host=wv(st2.vm_host, pm),
-            vm_cores=wv(st2.vm_cores, h_cores),
-            vm_expiry=wv(st2.vm_expiry, jnp.inf),
-            free_cores=st2.free_cores.at[pm].add(
-                jnp.where(do_dispatch, -h_cores, 0.0)),
-            f_pr=wv(st2.f_pr, params.image_mb),
-            f_total=wv(st2.f_total, params.image_mb),
-            f_pl=wv(st2.f_pl, _BIG),
-            f_prov=wv(st2.f_prov, lay.repo_out),
-            f_cons=wv(st2.f_cons, lay.netin0 + pm),
-            f_active=wv(st2.f_active, True),
-            f_release=wv(st2.f_release, st.t + params.latency_s),
-            f_kind=wv(st2.f_kind, KIND_IMAGE_XFER),
-            overflow=st2.overflow | overflow,
-        )
-        progressed = do_dispatch | do_reject
-        return st2, progressed
-
-    st, _ = jax.lax.while_loop(cond, body, (st, jnp.bool_(True)))
-    return st
-
-
-def _pm_scheduler(spec: CloudSpec, params: CloudParams, trace: Trace,
-                  st: CloudState) -> CloudState:
-    """On-demand PM scheduler (§3.5.1): wake enough machines for the unmet
-    queue, switch off loadless machines when the queue is empty.  The whole
-    pass is masked by ``params.pm_sched == ondemand`` so always-on clouds
-    run the identical (no-op) program."""
-    P = spec.n_pm
-    table = params.power
-    ondemand = jnp.asarray(params.pm_sched) == PM_ONDEMAND
-    queued = (st.task_state == TASK_PENDING) & (trace.arrival <= st.t)
-    q_cores = jnp.sum(jnp.where(queued, trace.cores, 0.0))
-    soon = mc.pm_future_capacity(st.pstate)
-    cap_soon = jnp.sum(jnp.where(soon, st.free_cores, 0.0))
-    deficit = q_cores - cap_soon
-    k = jnp.ceil(jnp.maximum(deficit, 0.0) / params.pm_cores).astype(jnp.int32)
-
-    off = st.pstate == PM_OFF
-    wake = ondemand & off & (jnp.cumsum(off.astype(jnp.int32)) <= k)
-    # loadless running PMs sleep only when nothing is queued
-    hosted = jax.ops.segment_sum(
-        (st.vstage != mc.VM_FREE).astype(jnp.int32), st.vm_host,
-        num_segments=P)
-    idle = (ondemand & (st.pstate == PM_RUNNING) & (hosted == 0)
-            & ~queued.any())
-
-    boot_s = table.duration[PM_SWITCHING_ON]
-    halt_s = table.duration[PM_SWITCHING_OFF]
-    pstate = jnp.where(wake, PM_SWITCHING_ON, st.pstate)
-    pstate = jnp.where(idle, PM_SWITCHING_OFF, pstate)
-    pstate_end = jnp.where(wake, st.t + boot_s, st.pstate_end)
-    pstate_end = jnp.where(idle, st.t + halt_s, pstate_end)
-    st = st._replace(pstate=pstate, pstate_end=pstate_end)
-
-    if spec.complex_power:
-        # hidden consumer carries the transition work; transition ends when
-        # the hidden flow drains (pstate_end stays at +inf)
-        lay = spec.layout
-        V = spec.n_vm
-        hid = jnp.arange(P) + V  # flow-slot indices of hidden consumers
-        trans = wake | idle
-        amount = jnp.where(wake, params.hidden_work_on, params.hidden_work_off)
-        st = st._replace(
-            pstate_end=jnp.where(trans, jnp.inf, pstate_end),
-            f_pr=st.f_pr.at[hid].set(
-                jnp.where(trans, amount, st.f_pr[hid])),
-            f_total=st.f_total.at[hid].set(
-                jnp.where(trans, amount, st.f_total[hid])),
-            f_pl=st.f_pl.at[hid].set(
-                jnp.where(trans, 0.2 * params.pm_cores, st.f_pl[hid])),
-            f_prov=st.f_prov.at[hid].set(
-                jnp.where(trans, lay.cpu0 + jnp.arange(P), st.f_prov[hid])),
-            f_cons=st.f_cons.at[hid].set(
-                jnp.where(trans, lay.hidden0 + jnp.arange(P), st.f_cons[hid])),
-            f_active=st.f_active.at[hid].set(
-                jnp.where(trans, True, st.f_active[hid])),
-            f_release=st.f_release.at[hid].set(
-                jnp.where(trans, st.t, st.f_release[hid])),
-            f_kind=st.f_kind.at[hid].set(
-                jnp.where(trans, KIND_HIDDEN, st.f_kind[hid])),
-        )
-    return st
-
-
 def _simulate_impl(spec: CloudSpec, trace: Trace, params: CloudParams,
                    state: CloudState | None,
                    t_stop: jax.Array) -> CloudResult:
-    """Single-scenario engine body (trace it once, run it for every
-    parameter point — no python branch below depends on a params value)."""
-    lay = spec.layout
-    P, V, T = spec.n_pm, spec.n_vm, trace.n
+    """Single-scenario engine: the staged pipeline (repro.core.loop) inside
+    one ``lax.while_loop``.  Trace it once, run it for every parameter
+    point — no python branch here depends on a params value."""
     st0 = init_state(spec, trace, params) if state is None else state
-    # Arrivals at exactly the current clock (e.g. t=0) must be served before
-    # the first horizon jump — later arrivals get their scheduler pass inside
-    # the loop body because the horizon stops at each arrival time.
-    st0 = _dispatch_loop(spec, params, trace,
-                         _pm_scheduler(spec, params, trace, st0))
+    st0 = loop.management_pass(spec, params, trace, st0)
     t_stop = jnp.asarray(t_stop, jnp.float32)
-    vm_slot = jnp.arange(V)
-    hid_slot = jnp.arange(P) + V
 
     def cond(st: CloudState):
         return st.running & (st.n_events < spec.max_events)
 
-    def body(st: CloudState):
-        ts0, vs0, ps0, fa0 = st.task_state, st.vstage, st.pstate, st.f_active
-        perf = _spreader_perf(spec, params, st)
-        r, live, thresh = _rates(spec, st, perf)
-
-        # ---- event horizon --------------------------------------------------
-        ttc = jnp.where(live & (r > 0), st.f_pr / jnp.maximum(r, 1e-30), _BIG)
-        gated = st.f_active & (st.t < st.f_release)
-        ttg = jnp.where(gated, st.f_release - st.t, _BIG)
-        pending = st.task_state == TASK_PENDING
-        future = pending & (trace.arrival > st.t)
-        tta = jnp.where(future, trace.arrival - st.t, _BIG)
-        trans = (st.pstate == PM_SWITCHING_ON) | (st.pstate == PM_SWITCHING_OFF)
-        ttp = jnp.where(trans & jnp.isfinite(st.pstate_end),
-                        st.pstate_end - st.t, _BIG)
-        alloc = st.vstage == mc.VM_ALLOCATED
-        tte = jnp.where(alloc & jnp.isfinite(st.vm_expiry),
-                        st.vm_expiry - st.t, _BIG)
-        ttm = jnp.where(jnp.isfinite(st.meter_next), st.meter_next - st.t, _BIG)
-        tts = jnp.where(jnp.isfinite(t_stop), t_stop - st.t, _BIG)
-        dt = jnp.minimum(
-            jnp.minimum(jnp.minimum(jnp.min(ttc), jnp.min(tta)),
-                        jnp.minimum(jnp.min(ttp), jnp.min(tte))),
-            jnp.minimum(jnp.minimum(jnp.min(ttg), ttm), tts))
-        has_event = dt < _BIG
-        dt = jnp.where(has_event, jnp.maximum(dt, 0.0), 0.0)
-
-        # ---- observe: the meter stack integrates [t, t+dt] ------------------
-        # One pure hook (energy.observe) advances every meter — per-PM exact
-        # integrals, per-VM Eq. 6 attribution, group/IaaS aggregates,
-        # indirect meters, and the paper's sampled meter on its tick.
-        t_new, t_c = kahan_add(st.t, st.t_c, dt)
-        tick = jnp.isfinite(st.meter_next) & (st.meter_next <= t_new)
-        period = jnp.asarray(params.metering_period, jnp.float32)
-        meter_next = jnp.where(tick, st.meter_next + period, st.meter_next)
-        view = _sim_view(spec, params, trace, st, r, live, tick, period)
-        meters = observe(spec.meters, params.meter, view, dt, st.meters)
-
-        # ---- drain flows ----------------------------------------------------
-        f_pr = jnp.where(live, jnp.maximum(st.f_pr - r * dt, 0.0), st.f_pr)
-        done = live & (f_pr <= thresh)
-        processed = st.processed + jax.ops.segment_sum(
-            jnp.where(live, r * dt, 0.0), st.f_prov, num_segments=lay.S)
-
-        # ---- completion phase: advance VM stages (Fig. 6) --------------------
-        # Work on the VM-flow prefix [:V]; hidden-consumer suffix handled below.
-        vdone = done[:V]
-        kind = st.f_kind[:V]
-        host = st.vm_host
-        xfer_done = vdone & (kind == KIND_IMAGE_XFER)
-        boot_done = vdone & (kind == KIND_BOOT)
-        task_done = vdone & (kind == KIND_TASK)
-        mig_done = vdone & (kind == KIND_MIGRATE)
-
-        v_pr, v_total = f_pr[:V], st.f_total[:V]
-        v_pl, v_kind = st.f_pl[:V], st.f_kind[:V]
-        v_prov, v_cons = st.f_prov[:V], st.f_cons[:V]
-        v_release, v_active = st.f_release[:V], st.f_active[:V]
-
-        # image transfer -> startup: flow becomes boot work on the host CPU
-        v_pr = jnp.where(xfer_done, params.boot_work, v_pr)
-        v_total = jnp.where(xfer_done, params.boot_work, v_total)
-        v_prov = jnp.where(xfer_done | boot_done, lay.cpu0 + host, v_prov)
-        v_cons = jnp.where(xfer_done | boot_done, lay.vm0 + vm_slot, v_cons)
-        v_pl = jnp.where(xfer_done, _BIG, v_pl)
-        v_kind = jnp.where(xfer_done, KIND_BOOT, v_kind)
-        v_release = jnp.where(xfer_done | boot_done | mig_done, t_new, v_release)
-        vstage = jnp.where(xfer_done, mc.VM_STARTUP, st.vstage)
-
-        # boot -> running: flow becomes the user task
-        tid = jnp.maximum(st.vm_task, 0)
-        twork = trace.work[tid]
-        tcores = trace.cores[tid]
-        v_pr = jnp.where(boot_done, twork, v_pr)
-        v_total = jnp.where(boot_done, twork, v_total)
-        v_pl = jnp.where(boot_done, tcores * params.perf_core, v_pl)
-        v_kind = jnp.where(boot_done, KIND_TASK, v_kind)
-        vstage = jnp.where(boot_done, mc.VM_RUNNING, vstage)
-
-        # migration arrives: resume the task on the destination host
-        new_host = jnp.where(mig_done, st.vm_mig_dst, host)
-        v_pr = jnp.where(mig_done, st.vm_saved_pr, v_pr)
-        v_total = jnp.where(mig_done, jnp.maximum(st.vm_saved_pr, 1e-9), v_total)
-        v_pl = jnp.where(mig_done, tcores * params.perf_core, v_pl)
-        v_kind = jnp.where(mig_done, KIND_TASK, v_kind)
-        v_prov = jnp.where(mig_done, lay.cpu0 + new_host, v_prov)
-        v_cons = jnp.where(mig_done, lay.vm0 + vm_slot, v_cons)
-        vstage = jnp.where(mig_done, mc.VM_RUNNING, vstage)
-
-        # task done -> destroy VM, release cores, complete task
-        freed = jax.ops.segment_sum(
-            jnp.where(task_done, st.vm_cores, 0.0), host, num_segments=P)
-        free_cores = st.free_cores + freed
-        task_state = st.task_state
-        t_done_arr = st.t_done
-        tslot = jnp.where(task_done, st.vm_task, T)  # T = scatter drop
-        task_state = task_state.at[tslot].set(TASK_DONE, mode="drop")
-        t_done_arr = t_done_arr.at[tslot].set(t_new, mode="drop")
-        vstage = jnp.where(task_done, mc.VM_FREE, vstage)
-        v_active = jnp.where(task_done, False, v_active)
-
-        f_pr = f_pr.at[:V].set(v_pr)
-        f_total = st.f_total.at[:V].set(v_total)
-        f_pl = st.f_pl.at[:V].set(v_pl)
-        f_prov = st.f_prov.at[:V].set(v_prov)
-        f_cons = st.f_cons.at[:V].set(v_cons)
-        f_release = st.f_release.at[:V].set(v_release)
-        f_kind = st.f_kind.at[:V].set(v_kind)
-        f_active = st.f_active.at[:V].set(v_active)
-
-        # allocation expiry (§3.4.2 self-defence)
-        expired = (st.vstage == mc.VM_ALLOCATED) & (st.vm_expiry <= t_new)
-        freed_a = jax.ops.segment_sum(
-            jnp.where(expired, st.vm_cores, 0.0), host, num_segments=P)
-        free_cores = free_cores + freed_a
-        vstage = jnp.where(expired, mc.VM_FREE, vstage)
-
-        # hidden consumer completion ends complex power transitions
-        hdone = done[V:]
-        pstate = st.pstate
-        pstate_end = st.pstate_end
-        if spec.complex_power:
-            pstate = jnp.where(hdone & (pstate == PM_SWITCHING_ON),
-                               PM_RUNNING, pstate)
-            pstate = jnp.where(hdone & (pstate == PM_SWITCHING_OFF),
-                               PM_OFF, pstate)
-        f_active = f_active.at[hid_slot].set(
-            jnp.where(hdone, False, f_active[hid_slot]))
-
-        # PM simple-model transitions by deadline
-        ponend = (pstate == PM_SWITCHING_ON) & (pstate_end <= t_new)
-        poffend = (pstate == PM_SWITCHING_OFF) & (pstate_end <= t_new)
-        pstate = jnp.where(ponend, PM_RUNNING, pstate)
-        pstate = jnp.where(poffend, PM_OFF, pstate)
-        pstate_end = jnp.where(ponend | poffend, jnp.inf, pstate_end)
-
-        st = st._replace(
-            t=t_new, t_c=t_c, n_events=st.n_events + 1,
-            f_pr=f_pr, f_total=f_total, f_pl=f_pl, f_prov=f_prov,
-            f_cons=f_cons, f_active=f_active, f_release=f_release,
-            f_kind=f_kind,
-            task_state=task_state, t_done=t_done_arr,
-            vstage=vstage, vm_host=new_host, free_cores=free_cores,
-            pstate=pstate, pstate_end=pstate_end,
-            meters=meters, meter_next=meter_next,
-            processed=processed,
-        )
-
-        # ---- management phase: PM then VM schedulers -------------------------
-        st = _pm_scheduler(spec, params, trace, st)
-        st = _dispatch_loop(spec, params, trace, st)
-
-        # ---- termination ------------------------------------------------------
-        queued = (st.task_state == TASK_PENDING) & (trace.arrival <= st.t)
-        live2 = st.f_active & (st.f_pr > 1e-6 * st.f_total + 1e-9)
-        pend2 = (st.task_state == TASK_PENDING) & (trace.arrival > st.t)
-        trans2 = (st.pstate == PM_SWITCHING_ON) | (st.pstate == PM_SWITCHING_OFF)
-        more = live2.any() | pend2.any() | trans2.any() | queued.any()
-        hit_stop = jnp.isfinite(t_stop) & (st.t >= t_stop)
-        # Progress guard: continue only if the horizon found an event or the
-        # management phase changed machine/task state this iteration (e.g.
-        # the very first dispatch at t=0).  A queued-but-unservable rest
-        # state (everything off, nothing waking) therefore terminates
-        # instead of spinning to max_events.
-        changed = (jnp.any(st.task_state != ts0) | jnp.any(st.vstage != vs0)
-                   | jnp.any(st.pstate != ps0) | jnp.any(st.f_active != fa0))
-        return st._replace(
-            running=(has_event | changed) & more & ~hit_stop)
-
-    st = jax.lax.while_loop(cond, body, st0)
+    st = jax.lax.while_loop(
+        cond, loop.make_body(spec, params, trace, t_stop), st0)
     return CloudResult(
         state=st,
         completion=st.t_done,
@@ -851,8 +396,9 @@ def simulate_batch_sharded(spec: CloudSpec, trace: Trace,
     should use so a sweep fills a whole pod instead of one core.
 
     Per-point results are bit-identical to the unsharded call; with a
-    single device (or a batch size coprime with the device count) it falls
-    back to plain :func:`simulate_batch`.  Implemented in
+    single device it falls back to plain :func:`simulate_batch`, and batch
+    sizes that don't divide the device count are padded and masked so the
+    full mesh is still used.  Implemented in
     :mod:`repro.experiments.shard` (imported lazily: the core engine has no
     dependency on the experiment layer).
     """
@@ -866,35 +412,15 @@ def start_migration(spec: CloudSpec, params: CloudParams, st: CloudState,
     """Begin live-migrating VM slot ``v`` to PM ``dst`` (paper Fig. 6:
     running -> suspend-transfer/migrating -> resume on the new host).
 
-    The caller (a consolidating PM scheduler, see examples/) must ensure the
-    destination fits; cores move src->dst immediately (allocation semantics).
+    The out-of-loop management API over the shared machinery in
+    :func:`repro.core.loop.consolidate.migration_update` — the in-loop
+    consolidation PM scheduler (``pm_sched="consolidate"``) issues the
+    identical update from inside the pipeline.  The caller must ensure the
+    destination fits; cores move src->dst immediately (allocation
+    semantics).
     """
-    lay = spec.layout
-    v = jnp.asarray(v, jnp.int32)
-    dst = jnp.asarray(dst, jnp.int32)
-    src = st.vm_host[v]
-    ok = (st.vstage[v] == mc.VM_RUNNING) & (st.free_cores[dst] >= st.vm_cores[v])
-
-    def w(arr, val):
-        return arr.at[v].set(jnp.where(ok, val, arr[v]))
-
-    return st._replace(
-        vstage=w(st.vstage, mc.VM_MIGRATING),
-        vm_mig_dst=w(st.vm_mig_dst, dst),
-        vm_saved_pr=w(st.vm_saved_pr, st.f_pr[v]),
-        free_cores=(st.free_cores
-                    .at[src].add(jnp.where(ok, st.vm_cores[v], 0.0))
-                    .at[dst].add(jnp.where(ok, -st.vm_cores[v], 0.0))),
-        f_pr=w(st.f_pr, params.vm_mem_mb),
-        f_total=w(st.f_total, params.vm_mem_mb),
-        f_pl=w(st.f_pl, _BIG),
-        f_prov=w(st.f_prov, lay.netout0 + src),
-        f_cons=w(st.f_cons, lay.netin0 + dst),
-        f_active=w(st.f_active, True),
-        f_release=w(st.f_release, st.t + params.latency_s),
-        f_kind=w(st.f_kind, KIND_MIGRATE),
-        running=jnp.bool_(True),
-    )
+    st = migration_update(spec, params, st, v, dst, jnp.bool_(True))
+    return st._replace(running=jnp.bool_(True))
 
 
 @functools.partial(jax.jit, static_argnames=("spec",))

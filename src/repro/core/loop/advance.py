@@ -1,0 +1,109 @@
+"""Stage 1 — ``advance``: unified resource sharing + clock-to-horizon.
+
+Computes the per-spreader performance vector from the machine states
+(Eq. 5), runs the low-level sharing scheduler (§3.2) for this interval's
+rates, finds the event horizon ``dt = min(next completion, next arrival,
+PM transition, allocation expiry, meter tick, t_stop)`` (§3.1), advances
+the Kahan clock by exactly ``dt`` and drains every live flow.
+
+State delta: ``t``/``t_c``/``n_events`` (the clock), ``meter_next`` (tick
+consumed), ``f_pr`` (drained flows), ``processed`` (provider utilisation
+counters).  Context delta: the full interval fact sheet (``r``, ``live``,
+``thresh``, ``done``, ``dt``, ``t0``/``t_new``, ``has_event``, ``tick``,
+``period``) every later stage reads.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import machine as mc
+from ..energy import (PM_OFF, PM_RUNNING, PM_SWITCHING_OFF, PM_SWITCHING_ON,
+                      kahan_add)
+from ..fairshare import SCHEDULERS
+from .state import BIG, TASK_PENDING, CloudState, StageCtx
+
+
+def spreader_perf(spec, params, st: CloudState) -> jax.Array:
+    """perf[S] from machine states (Eq. 5: power state gates processing)."""
+    lay = spec.layout
+    P, V = spec.n_pm, spec.n_vm
+    cpu_cap = params.pm_cores * params.perf_core
+    perf = jnp.zeros((lay.S,), jnp.float32)
+    cpu_on = st.pstate == PM_RUNNING
+    if spec.complex_power:
+        cpu_on = cpu_on | (st.pstate == PM_SWITCHING_ON) | (
+            st.pstate == PM_SWITCHING_OFF)
+    perf = perf.at[lay.cpu0:lay.cpu0 + P].set(
+        jnp.where(cpu_on, cpu_cap, 0.0))
+    net_on = st.pstate != PM_OFF
+    perf = perf.at[lay.netin0:lay.netin0 + P].set(
+        jnp.where(net_on, params.net_bw, 0.0))
+    perf = perf.at[lay.netout0:lay.netout0 + P].set(
+        jnp.where(net_on, params.net_bw, 0.0))
+    perf = perf.at[lay.repo_out].set(params.repo_bw)
+    perf = perf.at[lay.repo_disk].set(params.repo_bw)
+    vm_on = mc.vm_cpu_active(st.vstage) | (st.vstage == mc.VM_INITIAL_TRANSFER)
+    perf = perf.at[lay.vm0:lay.vm0 + V].set(
+        jnp.where(vm_on, jnp.maximum(st.vm_cores, 1.0) * params.perf_core, 0.0))
+    perf = perf.at[lay.hidden0:lay.hidden0 + P].set(
+        jnp.broadcast_to(cpu_cap, (P,)))
+    return perf
+
+
+def rates(spec, st: CloudState, perf: jax.Array):
+    """One unified fair-share pass over the flat spreader space (§3.2)."""
+    thresh = 1e-6 * st.f_total + 1e-9
+    live = st.f_active & (st.t >= st.f_release) & (st.f_pr > thresh)
+    rate_fn = SCHEDULERS[spec.scheduler]
+    r = rate_fn(st.f_prov, st.f_cons, st.f_pl, live, perf,
+                backend=spec.backend, max_iters=spec.max_fill_iters)
+    return r, live, thresh
+
+
+def advance(ctx: StageCtx, st: CloudState):
+    spec, params, trace = ctx.spec, ctx.params, ctx.trace
+    lay = spec.layout
+    perf = spreader_perf(spec, params, st)
+    r, live, thresh = rates(spec, st, perf)
+
+    # ---- event horizon --------------------------------------------------
+    ttc = jnp.where(live & (r > 0), st.f_pr / jnp.maximum(r, 1e-30), BIG)
+    gated = st.f_active & (st.t < st.f_release)
+    ttg = jnp.where(gated, st.f_release - st.t, BIG)
+    pending = st.task_state == TASK_PENDING
+    future = pending & (trace.arrival > st.t)
+    tta = jnp.where(future, trace.arrival - st.t, BIG)
+    trans = (st.pstate == PM_SWITCHING_ON) | (st.pstate == PM_SWITCHING_OFF)
+    ttp = jnp.where(trans & jnp.isfinite(st.pstate_end),
+                    st.pstate_end - st.t, BIG)
+    alloc = st.vstage == mc.VM_ALLOCATED
+    tte = jnp.where(alloc & jnp.isfinite(st.vm_expiry),
+                    st.vm_expiry - st.t, BIG)
+    ttm = jnp.where(jnp.isfinite(st.meter_next), st.meter_next - st.t, BIG)
+    tts = jnp.where(jnp.isfinite(ctx.t_stop), ctx.t_stop - st.t, BIG)
+    dt = jnp.minimum(
+        jnp.minimum(jnp.minimum(jnp.min(ttc), jnp.min(tta)),
+                    jnp.minimum(jnp.min(ttp), jnp.min(tte))),
+        jnp.minimum(jnp.minimum(jnp.min(ttg), ttm), tts))
+    has_event = dt < BIG
+    dt = jnp.where(has_event, jnp.maximum(dt, 0.0), 0.0)
+
+    # ---- clock + sampled-meter tick ------------------------------------
+    t_new, t_c = kahan_add(st.t, st.t_c, dt)
+    tick = jnp.isfinite(st.meter_next) & (st.meter_next <= t_new)
+    period = jnp.asarray(params.metering_period, jnp.float32)
+    meter_next = jnp.where(tick, st.meter_next + period, st.meter_next)
+
+    # ---- drain flows ----------------------------------------------------
+    f_pr = jnp.where(live, jnp.maximum(st.f_pr - r * dt, 0.0), st.f_pr)
+    done = live & (f_pr <= thresh)
+    processed = st.processed + jax.ops.segment_sum(
+        jnp.where(live, r * dt, 0.0), st.f_prov, num_segments=lay.S)
+
+    ctx = ctx._replace(r=r, live=live, thresh=thresh, done=done, dt=dt,
+                       t0=st.t, t_new=t_new, has_event=has_event,
+                       tick=tick, period=period)
+    st = st._replace(t=t_new, t_c=t_c, n_events=st.n_events + 1,
+                     meter_next=meter_next, f_pr=f_pr, processed=processed)
+    return ctx, st

@@ -1,0 +1,112 @@
+"""The consolidation PM policy (``pm_sched="consolidate"``) and the live
+migration machinery it shares with :func:`repro.core.engine.start_migration`.
+
+This is the cross-layer policy DISSECT-CF exists to make cheap (paper §1,
+§3.4): a PM state scheduler that reads the *metering framework* — the live
+per-PM direct and idle meters of the stack — and reacts inside the event
+loop by rewriting VM and flow state.  Per iteration it makes at most one
+masked migration decision:
+
+* **source** — the least-loaded RUNNING host whose live meter reading is
+  idle-dominated (``pm_idle.last_power / pm.last_power`` above
+  ``CloudParams.consolidate_idle_frac``) and that hosts a migratable
+  (RUNNING) VM;
+* **victim** — the smallest-cores running VM on the source (cheapest to
+  re-place);
+* **destination** — the best-fit running host: least free cores among
+  those that fit the victim, are not the source, and are *at least as
+  loaded* as the source.  The load ordering makes moves strictly packing
+  (never spreading) and breaks migration ping-pong between two
+  equally-idle hosts.
+
+Once a donor's last VM has resumed elsewhere the on-demand sleep rule in
+the ``pm_sched`` stage powers it down — consolidation inherits on-demand's
+wake/sleep behaviour and adds the migrations that empty donors earlier.
+
+Everything is masked by ``params.pm_sched == PM_CONSOLIDATE``: scheduler
+identity stays *data*, so a consolidation cell batches through the same
+compiled program as always-on / on-demand cells (``simulate_batch``,
+tournaments, sharded sweeps — DESIGN.md §4, §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import machine as mc
+from .state import BIG, KIND_MIGRATE, PM_CONSOLIDATE, CloudState
+
+
+def migration_update(spec, params, st: CloudState, v, dst, ok) -> CloudState:
+    """Begin live-migrating VM slot ``v`` to PM ``dst``, masked by ``ok``
+    (paper Fig. 6: running -> suspend-transfer/migrating -> resume).
+
+    The one shared implementation behind the public out-of-loop API
+    (:func:`repro.core.engine.start_migration`) and the in-loop
+    consolidation policy.  Cores move src -> dst immediately (allocation
+    semantics); the flow slot becomes the serialized memory state moving
+    over the source NIC.  Refused (``ok=False``) lanes are bit-identical
+    no-ops.
+    """
+    lay = spec.layout
+    v = jnp.asarray(v, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    src = st.vm_host[v]
+    ok = ok & (st.vstage[v] == mc.VM_RUNNING) & \
+        (st.free_cores[dst] >= st.vm_cores[v])
+
+    def w(arr, val):
+        return arr.at[v].set(jnp.where(ok, val, arr[v]))
+
+    return st._replace(
+        vstage=w(st.vstage, mc.VM_MIGRATING),
+        vm_mig_dst=w(st.vm_mig_dst, dst),
+        vm_saved_pr=w(st.vm_saved_pr, st.f_pr[v]),
+        free_cores=(st.free_cores
+                    .at[src].add(jnp.where(ok, st.vm_cores[v], 0.0))
+                    .at[dst].add(jnp.where(ok, -st.vm_cores[v], 0.0))),
+        f_pr=w(st.f_pr, params.vm_mem_mb),
+        f_total=w(st.f_total, params.vm_mem_mb),
+        f_pl=w(st.f_pl, BIG),
+        f_prov=w(st.f_prov, lay.netout0 + src),
+        f_cons=w(st.f_cons, lay.netin0 + dst),
+        f_active=w(st.f_active, True),
+        f_release=w(st.f_release, st.t + params.latency_s),
+        f_kind=w(st.f_kind, KIND_MIGRATE),
+        running=st.running | ok,
+    )
+
+
+def consolidation_step(spec, params, st: CloudState) -> CloudState:
+    """One masked consolidation decision, driven by the live meter stack."""
+    from ..energy import PM_RUNNING
+    P, V = spec.n_pm, spec.n_vm
+    consolidate = jnp.asarray(params.pm_sched) == PM_CONSOLIDATE
+
+    # Live readings: last-interval instantaneous draw of the per-PM direct
+    # meter and of the idle-component meter (the unattributed-idle share a
+    # better packing could shed).
+    pm_w = st.meters.pm.last_power
+    idle_w = st.meters.pm_idle.last_power
+    idle_frac = idle_w / jnp.maximum(pm_w, 1e-30)
+
+    running = st.pstate == PM_RUNNING
+    used = jnp.asarray(params.pm_cores, jnp.float32) - st.free_cores
+    movable = st.vstage == mc.VM_RUNNING
+    n_movable = jax.ops.segment_sum(movable.astype(jnp.int32), st.vm_host,
+                                    num_segments=P)
+    donor = (running & (n_movable > 0)
+             & (idle_frac > jnp.asarray(params.consolidate_idle_frac,
+                                        jnp.float32)))
+    src = jnp.argmin(jnp.where(donor, used, jnp.inf)).astype(jnp.int32)
+
+    on_src = movable & (st.vm_host == src)
+    v = jnp.argmin(jnp.where(on_src, st.vm_cores, jnp.inf)).astype(jnp.int32)
+    need = st.vm_cores[v]
+
+    fit = (running & (st.free_cores >= need) & (jnp.arange(P) != src)
+           & (used >= used[src]))
+    dst = jnp.argmin(jnp.where(fit, st.free_cores, jnp.inf)).astype(jnp.int32)
+
+    do = consolidate & donor.any() & on_src.any() & fit.any()
+    return migration_update(spec, params, st, v, dst, do)

@@ -1,0 +1,76 @@
+"""The thin driver composing the staged subsystem pipeline (DESIGN.md §5).
+
+One loop iteration is exactly the stage sequence :data:`STAGES`:
+
+    advance -> observe -> vm_lifecycle -> pm_power -> pm_sched -> vm_sched
+
+followed by the :func:`termination` verdict.  The driver owns *no*
+simulation semantics — it snapshots the machine/task state for the
+progress guard, folds the state through the stages, and decides whether
+the ``lax.while_loop`` continues.  Policies and subsystems are added by
+editing the stage modules (or the policy registries they dispatch on),
+not this file.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..energy import PM_SWITCHING_OFF, PM_SWITCHING_ON
+from . import advance, lifecycle, observe, pm_sched, power, vm_sched
+from .state import TASK_PENDING, CloudState, StageCtx
+
+STAGES = (
+    advance.advance,        # §3.1/§3.2 sharing + clock-to-horizon + drain
+    observe.observe_stage,  # §3.3 meter stack over [t0, t_new]
+    lifecycle.vm_lifecycle,  # §3.4.3 Fig. 6 VM transitions (+ migration)
+    power.pm_power,         # §3.4.2 PM power-state transitions
+    pm_sched.pm_sched,      # §3.5.1 PM policy hook (+ consolidation)
+    vm_sched.vm_sched,      # §3.5.1 VM policy hook (dispatch queue)
+)
+
+
+def termination(ctx: StageCtx, st: CloudState, snap) -> CloudState:
+    """Continue while events remain, unless ``t_stop`` was reached.
+
+    Progress guard: continue only if the horizon found an event or the
+    management stages changed machine/task state this iteration (e.g. the
+    very first dispatch at t=0).  A queued-but-unservable rest state
+    (everything off, nothing waking) therefore terminates instead of
+    spinning to ``max_events``.
+    """
+    ts0, vs0, ps0, fa0 = snap
+    trace = ctx.trace
+    queued = (st.task_state == TASK_PENDING) & (trace.arrival <= st.t)
+    live2 = st.f_active & (st.f_pr > 1e-6 * st.f_total + 1e-9)
+    pend2 = (st.task_state == TASK_PENDING) & (trace.arrival > st.t)
+    trans2 = (st.pstate == PM_SWITCHING_ON) | (st.pstate == PM_SWITCHING_OFF)
+    more = live2.any() | pend2.any() | trans2.any() | queued.any()
+    hit_stop = jnp.isfinite(ctx.t_stop) & (st.t >= ctx.t_stop)
+    changed = (jnp.any(st.task_state != ts0) | jnp.any(st.vstage != vs0)
+               | jnp.any(st.pstate != ps0) | jnp.any(st.f_active != fa0))
+    return st._replace(running=(ctx.has_event | changed) & more & ~hit_stop)
+
+
+def make_body(spec, params, trace, t_stop):
+    """The ``lax.while_loop`` body: one pipeline pass over the stages."""
+
+    def body(st: CloudState) -> CloudState:
+        ctx = StageCtx(spec=spec, params=params, trace=trace, t_stop=t_stop)
+        snap = (st.task_state, st.vstage, st.pstate, st.f_active)
+        for stage in STAGES:
+            ctx, st = stage(ctx, st)
+        return termination(ctx, st, snap)
+
+    return body
+
+
+def management_pass(spec, params, trace, st: CloudState) -> CloudState:
+    """The pre-loop scheduler pass: arrivals at exactly the current clock
+    (e.g. t=0) must be served before the first horizon jump — later
+    arrivals get their pass inside the loop because the horizon stops at
+    each arrival time."""
+    ctx = StageCtx(spec=spec, params=params, trace=trace,
+                   t_stop=jnp.float32(jnp.inf))
+    _, st = pm_sched.pm_sched(ctx, st)
+    _, st = vm_sched.vm_sched(ctx, st)
+    return st

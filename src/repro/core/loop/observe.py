@@ -1,0 +1,80 @@
+"""Stage 2 — ``observe``: the PR 2 metering hook over ``[t0, t_new]``.
+
+Builds one :class:`~repro.core.energy.SimView` of the interval (paper
+Fig. 7: utilisation counters -> consumption models -> meters) and calls
+the pure :func:`repro.core.energy.observe` hook, which integrates every
+meter in the declarative stack exactly over the piecewise-constant
+interval and drives the paper's sampled meter on its tick.
+
+State delta: ``meters`` only.  Context delta: publishes the ``view`` so
+the policy stages (``pm_sched`` / ``vm_sched``) can read the same
+observation surface the meters consumed.
+
+Everything in the view is read from *interval-start* facts: the rates in
+``ctx.r``/``ctx.live`` were computed against the pre-advance state and are
+constant over the whole interval, and the clock reference is ``ctx.t0``
+(the ``advance`` stage has already moved ``st.t`` to the interval end).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import machine as mc
+from ..energy import MODEL_LINEAR, SimView, instantaneous_power, observe
+from ..influence import coupled_vm_counts, influence_labels
+from .state import TASK_PENDING, CloudState, StageCtx
+
+
+def build_view(ctx: StageCtx, st: CloudState) -> SimView:
+    """The meter stack's observation surface for the current interval.
+
+    The per-VM half wires Eq. 6 through :mod:`repro.core.influence`: a VM
+    draws power iff its spreader sits in its host CPU spreader's influence
+    group, and the idle-share divisor is that group's VM count
+    (``|G(s_vm)| - 1``).
+    """
+    spec, params, trace = ctx.spec, ctx.params, ctx.trace
+    lay = spec.layout
+    P, V = spec.n_pm, spec.n_vm
+    table = params.power
+    r, live = ctx.r, ctx.live
+
+    delivered = jax.ops.segment_sum(jnp.where(live, r, 0.0), st.f_prov,
+                                    num_segments=lay.S)
+    cpu_del = delivered[lay.cpu0:lay.cpu0 + P]
+    cpu_cap = jnp.maximum(params.pm_cores * params.perf_core, 1e-30)
+    util = cpu_del / cpu_cap
+    power = instantaneous_power(table, st.pstate, util)
+    p_idle = table.p_min[st.pstate]
+    p_span = jnp.where(table.mode[st.pstate] == MODEL_LINEAR,
+                       table.p_max[st.pstate] - p_idle, 0.0)
+
+    if spec.meters.vm_direct:
+        labels = influence_labels(st.f_prov, st.f_cons, live, lay.S)
+        in_grp, vms_on_host = coupled_vm_counts(
+            labels, lay.cpu0 + st.vm_host, lay.vm0 + jnp.arange(V),
+            st.vm_host, P)
+        vm_rate_frac = (jnp.where(in_grp, r[:V], 0.0)
+                        / jnp.maximum(cpu_del[st.vm_host], 1e-30))
+        vm_host = jnp.where(in_grp, st.vm_host, -1)
+    else:
+        vms_on_host = jnp.zeros((P,), jnp.int32)
+        vm_rate_frac = jnp.zeros((V,), jnp.float32)
+        vm_host = jnp.full((V,), -1, jnp.int32)
+
+    hosted = st.vstage != mc.VM_FREE
+    queued = (st.task_state == TASK_PENDING) & (trace.arrival <= ctx.t0)
+    return SimView(
+        pm_power=power, pm_idle=p_idle, pm_span=p_span, pm_util=util,
+        vm_rate_frac=vm_rate_frac, vm_host=vm_host, vms_on_host=vms_on_host,
+        n_hosted=hosted.sum().astype(jnp.float32),
+        n_queued=queued.sum().astype(jnp.float32),
+        tick=ctx.tick, period=ctx.period)
+
+
+def observe_stage(ctx: StageCtx, st: CloudState):
+    view = build_view(ctx, st)
+    meters = observe(ctx.spec.meters, ctx.params.meter, view, ctx.dt,
+                     st.meters)
+    return ctx._replace(view=view), st._replace(meters=meters)

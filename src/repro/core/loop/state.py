@@ -1,0 +1,128 @@
+"""The engine loop's state protocol: entity constants, the dense
+:class:`CloudState` pytree, and the per-iteration :class:`StageCtx`.
+
+The event-loop body is a *staged subsystem pipeline* (DESIGN.md §5): a
+sequence of pure stage functions, each with the signature
+
+    ``stage(ctx: StageCtx, st: CloudState) -> (StageCtx, CloudState)``
+
+``CloudState`` is the only value carried across ``lax.while_loop``
+iterations; ``StageCtx`` is rebuilt every iteration and threads the
+*interval facts* (rates, event horizon, completion masks, the meter
+stack's :class:`~repro.core.energy.SimView`) from the stages that compute
+them to the stages that consume them.  Each stage returns an updated
+``CloudState`` whose touched fields are that stage's explicit state delta
+— the driver (:mod:`repro.core.loop.driver`) only composes, never edits.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..energy import MeterState
+
+BIG = jnp.float32(3.0e38)
+
+# Consumption kinds: what a VM slot's single flow currently carries.
+KIND_MIGRATE = 5
+
+# Task states
+TASK_PENDING = 0   # submitted (queued once arrival <= t)
+TASK_ACTIVE = 1    # bound to a VM
+TASK_DONE = 2
+TASK_REJECTED = 3
+
+# VM/PM scheduler codes: index into these tuples == the CloudParams code.
+# This is the scheduler-code registry the management stages dispatch on —
+# policies are *data*, so a tournament over any subset of the matrix shares
+# one compiled program (DESIGN.md §1, §4).
+VM_SCHEDULERS = ("firstfit", "nonqueuing", "smallestfirst")
+PM_SCHEDULERS = ("alwayson", "ondemand", "consolidate")
+VM_FIRSTFIT, VM_NONQUEUING, VM_SMALLESTFIRST = range(3)
+PM_ALWAYSON, PM_ONDEMAND, PM_CONSOLIDATE = range(3)
+
+
+class CloudState(NamedTuple):
+    t: jax.Array          # f32 simulated clock
+    t_c: jax.Array        # f32 Kahan compensation for the clock
+    n_events: jax.Array   # i32
+
+    # consumption slots: [0:V] VM flows, [V:V+P] hidden consumers
+    f_pr: jax.Array       # f32[V+P] remaining processing
+    f_total: jax.Array    # f32[V+P] amount at registration
+    f_pl: jax.Array       # f32[V+P] rate limit
+    f_prov: jax.Array     # i32[V+P]
+    f_cons: jax.Array     # i32[V+P]
+    f_active: jax.Array   # bool[V+P]
+    f_release: jax.Array  # f32[V+P] latency gate
+    f_kind: jax.Array     # i32[V+P]
+
+    task_state: jax.Array  # i32[T]
+    task_vm: jax.Array     # i32[T]
+    t_done: jax.Array      # f32[T]
+
+    vstage: jax.Array      # i32[V]
+    vm_task: jax.Array     # i32[V]
+    vm_host: jax.Array     # i32[V]
+    vm_cores: jax.Array    # f32[V]
+    vm_expiry: jax.Array   # f32[V]  (ALLOCATED slots; inf otherwise)
+    vm_saved_pr: jax.Array  # f32[V] remaining task work across suspend/migrate
+    vm_mig_dst: jax.Array  # i32[V]
+
+    pstate: jax.Array      # i32[P]
+    pstate_end: jax.Array  # f32[P] (simple model transition deadline)
+    free_cores: jax.Array  # f32[P]
+
+    meters: MeterState     # the meter stack's accumulated readings (§3.3)
+    meter_next: jax.Array  # f32 next sample tick (inf when disabled)
+    processed: jax.Array   # f32[S] provider-side utilisation counters
+
+    overflow: jax.Array    # bool — VM slot pool exhausted at some dispatch
+    running: jax.Array     # bool
+
+    # Pre-meter-stack views (the default stack's per-PM direct meters).
+    @property
+    def energy_hi(self) -> jax.Array:
+        return self.meters.pm.energy_hi
+
+    @property
+    def energy_lo(self) -> jax.Array:
+        return self.meters.pm.energy_lo
+
+    @property
+    def energy_sampled(self) -> jax.Array:
+        return self.meters.pm_sampled
+
+
+class StageCtx(NamedTuple):
+    """Read-mostly context threaded through one pipeline pass.
+
+    The scenario inputs (``spec``, ``params``, ``trace``, ``t_stop``) are
+    fixed for the whole simulation; the interval fields are ``None`` until
+    the stage that owns them runs (``advance`` fills the rates/horizon
+    facts, ``observe`` publishes the :class:`~repro.core.energy.SimView`
+    the policy stages may read).  Stages communicate *only* through this
+    context and the returned :class:`CloudState`.
+    """
+
+    spec: Any                    # CloudSpec (jit-static)
+    params: Any                  # CloudParams pytree
+    trace: Any                   # Trace
+    t_stop: jax.Array            # f32 scalar
+
+    # -- filled by the `advance` stage -----------------------------------
+    r: jax.Array | None = None        # f32[F] fair-share rates this interval
+    live: jax.Array | None = None     # bool[F] flows that progressed
+    thresh: jax.Array | None = None   # f32[F] completion epsilon
+    done: jax.Array | None = None     # bool[F] flows that completed
+    dt: jax.Array | None = None       # f32 the event horizon
+    t0: jax.Array | None = None       # f32 interval start (pre-advance clock)
+    t_new: jax.Array | None = None    # f32 interval end (== state clock after)
+    has_event: jax.Array | None = None  # bool — the horizon found an event
+    tick: jax.Array | None = None     # bool — sampled-meter tick fired
+    period: jax.Array | None = None   # f32 metering period
+
+    # -- filled by the `observe` stage -----------------------------------
+    view: Any = None             # energy.SimView of [t0, t_new]

@@ -1,0 +1,97 @@
+"""Stage 6 — ``vm_sched``: the VM scheduler policy hook (§3.5.1).
+
+Serves the request queue until blocked or empty.  The scheduler identity
+is data (``params.vm_sched``): the queue key and the rejection rule are
+masked selections, so one compiled program covers first-fit, non-queuing
+and smallest-first.
+
+State delta: per dispatched request, the allocated VM slot (``vstage`` /
+``vm_*``), its image-transfer flow, the host's ``free_cores``, and the
+task binding; per rejected request, its ``task_state``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import machine as mc
+from ..arrays import KIND_IMAGE_XFER
+from .state import (BIG, TASK_ACTIVE, TASK_PENDING, TASK_REJECTED,
+                    VM_NONQUEUING, VM_SMALLESTFIRST, CloudState, StageCtx)
+
+
+def dispatch_loop(spec, params, trace, st: CloudState) -> CloudState:
+    lay = spec.layout
+    P, V, T = spec.n_pm, spec.n_vm, trace.n
+    is_smallest = jnp.asarray(params.vm_sched) == VM_SMALLESTFIRST
+    is_nonqueue = jnp.asarray(params.vm_sched) == VM_NONQUEUING
+
+    def queued_mask(task_state):
+        return (task_state == TASK_PENDING) & (trace.arrival <= st.t)
+
+    def cond(s):
+        st2, progressed = s
+        return progressed
+
+    def body(s):
+        st2, _ = s
+        queued = queued_mask(st2.task_state)
+        any_q = queued.any()
+        key = jnp.where(queued,
+                        jnp.where(is_smallest, trace.cores, trace.arrival),
+                        jnp.inf)
+        head = jnp.argmin(key).astype(jnp.int32)
+        h_cores = trace.cores[head]
+
+        oversize = h_cores > params.pm_cores  # can never fit -> reject always
+        fit = mc.pm_accepting(st2.pstate) & (st2.free_cores >= h_cores)
+        any_fit = fit.any()
+        pm = jnp.argmax(fit).astype(jnp.int32)  # first fit
+        vfree = st2.vstage == mc.VM_FREE
+        any_v = vfree.any()
+        v = jnp.argmax(vfree).astype(jnp.int32)
+
+        do_reject = any_q & (oversize | (is_nonqueue & ~any_fit))
+        do_dispatch = any_q & ~do_reject & any_fit & any_v
+        overflow = any_q & ~do_reject & any_fit & ~any_v
+
+        # --- reject head ---
+        task_state = st2.task_state.at[head].set(
+            jnp.where(do_reject, TASK_REJECTED, st2.task_state[head]))
+
+        # --- dispatch head: VM -> INITIAL_TRANSFER, flow slot = image xfer ---
+        def wv(arr, val):
+            return arr.at[v].set(jnp.where(do_dispatch, val, arr[v]))
+
+        st2 = st2._replace(
+            task_state=task_state.at[head].set(
+                jnp.where(do_dispatch, TASK_ACTIVE, task_state[head])),
+            task_vm=st2.task_vm.at[head].set(
+                jnp.where(do_dispatch, v, st2.task_vm[head])),
+            vstage=wv(st2.vstage, mc.VM_INITIAL_TRANSFER),
+            vm_task=wv(st2.vm_task, head),
+            vm_host=wv(st2.vm_host, pm),
+            vm_cores=wv(st2.vm_cores, h_cores),
+            vm_expiry=wv(st2.vm_expiry, jnp.inf),
+            free_cores=st2.free_cores.at[pm].add(
+                jnp.where(do_dispatch, -h_cores, 0.0)),
+            f_pr=wv(st2.f_pr, params.image_mb),
+            f_total=wv(st2.f_total, params.image_mb),
+            f_pl=wv(st2.f_pl, BIG),
+            f_prov=wv(st2.f_prov, lay.repo_out),
+            f_cons=wv(st2.f_cons, lay.netin0 + pm),
+            f_active=wv(st2.f_active, True),
+            f_release=wv(st2.f_release, st.t + params.latency_s),
+            f_kind=wv(st2.f_kind, KIND_IMAGE_XFER),
+            overflow=st2.overflow | overflow,
+        )
+        progressed = do_dispatch | do_reject
+        return st2, progressed
+
+    st, _ = jax.lax.while_loop(cond, body, (st, jnp.bool_(True)))
+    return st
+
+
+def vm_sched(ctx: StageCtx, st: CloudState):
+    st = dispatch_loop(ctx.spec, ctx.params, ctx.trace, st)
+    return ctx, st

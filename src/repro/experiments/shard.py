@@ -8,13 +8,19 @@ mesh with ``shard_map`` — each device runs the identical vmapped engine on
 its slice, so an N-point grid uses a whole TPU/GPU pod instead of one core
 (DESIGN.md §4).
 
-* The shard count is the largest divisor of the batch size that fits the
-  device count; when that is 1 (single device, or a prime batch on a
-  mismatched pod) the call falls back to plain single-device
+* The mesh uses ``min(batch size, device count)`` shards.  A batch that
+  does not divide evenly (a prime batch on a mismatched pod) is
+  **padded and masked**: the batched leaves are padded with copies of the
+  leading rows up to the next multiple of the shard count, the padded
+  sweep runs on the full mesh, and the pad rows are sliced off the result
+  — so an awkward batch size costs at most one extra lane per device
+  instead of falling back to a single core.  Only a single device (or a
+  single-point batch) falls back to plain
   :func:`~repro.core.engine.simulate_batch` — same results, no mesh.
 * Per-point results are *bit-identical* to the unsharded call: ``vmap``
-  computes each lane independently, so slicing the batch over devices
-  changes the layout, never the arithmetic (tested in
+  computes each lane independently, so slicing the batch over devices —
+  or appending pad lanes that are later dropped — changes the layout,
+  never the arithmetic of the valid rows (tested in
   ``tests/test_experiments.py``).
 * On a CPU-only host the path is testable by forcing a multi-device
   topology: ``XLA_FLAGS=--xla_force_host_platform_device_count=2``
@@ -67,14 +73,27 @@ def batch_size(spec: engine.CloudSpec, trace: engine.Trace,
 
 
 def shard_count(n_points: int, n_devices: int | None = None) -> int:
-    """Largest divisor of ``n_points`` that fits on ``n_devices`` — the
-    number of mesh shards :func:`simulate_batch_sharded` will use."""
+    """Number of mesh shards :func:`simulate_batch_sharded` uses:
+    ``min(n_points, n_devices)`` — batch sizes that don't divide evenly are
+    padded up to the next multiple (see :func:`pad_rows`) rather than
+    dropping to fewer devices."""
     if n_devices is None:
         n_devices = jax.device_count()
-    for d in range(min(n_points, n_devices), 0, -1):
-        if n_points % d == 0:
-            return d
-    return 1
+    return max(min(n_points, n_devices), 1)
+
+
+def pad_rows(n_points: int, n_shards: int) -> int:
+    """How many pad lanes :func:`simulate_batch_sharded` appends so the
+    batch divides over ``n_shards`` (0 when it already divides)."""
+    return -n_points % max(n_shards, 1)
+
+
+def _pad_batch(trace_params, flags, pad: int):
+    """Append ``pad`` copies of the leading rows to every batched leaf."""
+    leaves, treedef = jax.tree.flatten(trace_params)
+    padded = [jnp.concatenate([l, l[:pad]], axis=0) if f else l
+              for l, f in zip(leaves, flags)]
+    return jax.tree.unflatten(treedef, padded)
 
 
 @functools.lru_cache(maxsize=64)
@@ -102,9 +121,12 @@ def simulate_batch_sharded(
     """:func:`repro.core.engine.simulate_batch`, batch axis sharded over
     ``devices`` (default: all of ``jax.devices()``) with ``shard_map``.
 
-    Falls back to the plain single-device ``vmap`` when only one shard fits
-    (one device, or a batch size coprime with the device count).  Results
-    are bit-identical either way; only the device layout changes.
+    Batch sizes that don't divide the shard count are padded with copies
+    of the leading rows and the pad lanes sliced off the result, so even a
+    prime-sized sweep fills the whole mesh.  Falls back to the plain
+    single-device ``vmap`` only when one shard fits (one device, or a
+    single point).  Valid rows are bit-identical either way; only the
+    device layout changes.
     """
     trace = jax.tree.map(jnp.asarray, trace)
     params = jax.tree.map(jnp.asarray, params)
@@ -114,9 +136,15 @@ def simulate_batch_sharded(
     if d <= 1:
         return engine.simulate_batch(spec, trace, params, t_stop)
     flags = batch_flags(spec, trace, params)
+    pad = pad_rows(n, d)
+    if pad:
+        trace, params = _pad_batch((trace, params), flags, pad)
     treedef = jax.tree.structure((trace, params))
     runner = _sharded_runner(spec, devs[:d], treedef, flags)
-    return runner((trace, params), jnp.asarray(t_stop, jnp.float32))
+    res = runner((trace, params), jnp.asarray(t_stop, jnp.float32))
+    if pad:
+        res = jax.tree.map(lambda l: l[:n], res)
+    return res
 
 
 def run_batch(spec: engine.CloudSpec, trace: engine.Trace,

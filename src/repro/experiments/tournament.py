@@ -27,7 +27,8 @@ def scheduler_grid(vm_scheds: Sequence[str | int] = engine.VM_SCHEDULERS,
                    pm_scheds: Sequence[str | int] = engine.PM_SCHEDULERS
                    ) -> list[tuple]:
     """The full cross product of VM x PM scheduler cells (defaults to every
-    registered policy — the paper's 3x2 matrix)."""
+    registered policy — the paper's 3x2 matrix plus the consolidation PM
+    scheduler, i.e. 3x3)."""
     return [(v, p) for v in vm_scheds for p in pm_scheds]
 
 

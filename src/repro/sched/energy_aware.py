@@ -13,9 +13,9 @@ architectures:
    DISSECT-CF task trace — work is measured in chip-seconds, a "PM" is a
    256-chip pod, a "VM request" is a job's pod reservation (image transfer
    models container/weights staging);
-3. :func:`evaluate_schedulers` sweeps the paper's scheduler matrix
-   (first-fit / smallest-first / non-queuing VM schedulers x always-on /
-   on-demand PM schedulers) through the tournament experiment
+3. :func:`evaluate_schedulers` sweeps the scheduler matrix (first-fit /
+   smallest-first / non-queuing VM schedulers x always-on / on-demand /
+   consolidate PM schedulers) through the tournament experiment
    (:mod:`repro.experiments.tournament` — one sharded
    :func:`repro.core.engine.simulate_batch` call; scheduler identity is a
    ``CloudParams`` code, so the whole matrix shares a single compile) and
@@ -148,19 +148,22 @@ def fleet_params(*, vm_sched="firstfit", pm_sched="alwayson",
 
 def evaluate_schedulers(trace: engine.Trace, *, n_pods: int = 8,
                         schedulers=None, sharded: bool = True) -> list[dict]:
-    """Sweep the paper's VM x PM scheduler matrix over one job trace.
+    """Sweep the VM x PM scheduler matrix over one job trace.
 
     A thin wrapper over the tournament experiment
     (:func:`repro.experiments.tournament.run`): scheduler choice is data
     (``CloudParams.vm_sched`` / ``pm_sched`` integer codes), so the whole
-    matrix — the default 3x2, or any grid via ``schedulers`` — runs as a
+    matrix — the default 3x3 (the paper's 3x2 plus the meter-driven
+    ``consolidate`` PM policy), or any grid via ``schedulers`` — runs as a
     single sharded :func:`repro.core.engine.simulate_batch` call, one
-    compile for every cell."""
+    compile for every cell.  Each row reports ``job_kwh`` / ``idle_kwh``
+    from the per-VM Eq. 6 meters, so the consolidation rows show directly
+    how much unattributed idle the migrations shed."""
     from repro.experiments import tournament
     if schedulers is None:
         schedulers = tournament.scheduler_grid(
             ("firstfit", "smallestfirst", "nonqueuing"),
-            ("alwayson", "ondemand"))
+            ("alwayson", "ondemand", "consolidate"))
     spec = engine.CloudSpec(n_pm=n_pods, n_vm=max(int(trace.n), 8))
     return tournament.run(spec, trace, fleet_params(),
                           schedulers=schedulers, sharded=sharded).rows

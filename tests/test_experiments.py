@@ -81,10 +81,12 @@ spec, base = engine.make_cloud(n_pm=2, n_vm=16, pm_cores=4.0, net_bw=100.0,
                                repo_bw=200.0, image_mb=100.0, boot_work=4.0,
                                latency_s=0.0)
 trace = synthetic_trace(20, parallel=5, seed=0)
-points = [dataclasses.replace(base, net_bw=jnp.float32(50.0 + 25.0 * i),
-                              boot_work=jnp.float32(2.0 + i))
-          for i in range(4)]
-params = engine.stack_params(points)
+def points(n):
+    return [dataclasses.replace(base, net_bw=jnp.float32(50.0 + 25.0 * i),
+                                boot_work=jnp.float32(2.0 + i))
+            for i in range(n)]
+
+params = engine.stack_params(points(4))
 assert shard.shard_count(4) == 2
 ref = engine.simulate_batch(spec, trace, params)
 got = shard.simulate_batch_sharded(spec, trace, params)
@@ -92,6 +94,15 @@ for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 # the result really lives on the 2-device mesh
 assert len(got.t_end.sharding.device_set) == 2, got.t_end.sharding
+
+# prime batch: pad-and-mask keeps both devices busy, valid rows bitwise
+params5 = engine.stack_params(points(5))
+assert shard.shard_count(5) == 2 and shard.pad_rows(5, 2) == 1
+ref5 = engine.simulate_batch(spec, trace, params5)
+got5 = shard.simulate_batch_sharded(spec, trace, params5)
+assert got5.t_end.shape == (5,)
+for a, b in zip(jax.tree.leaves(ref5), jax.tree.leaves(got5)):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 print("SHARDED_BITWISE_OK")
 """
     env = dict(os.environ,
@@ -102,11 +113,27 @@ print("SHARDED_BITWISE_OK")
     assert "SHARDED_BITWISE_OK" in r.stdout, r.stdout + r.stderr[-2000:]
 
 
-def test_shard_count_largest_divisor():
+def test_shard_count_and_pad_rows():
     assert shard.shard_count(8, 4) == 4
-    assert shard.shard_count(6, 4) == 3   # largest divisor that fits
-    assert shard.shard_count(7, 4) == 1   # prime batch -> fallback
+    assert shard.shard_count(6, 4) == 4   # pad-and-mask: full mesh
+    assert shard.shard_count(7, 4) == 4   # prime batch -> padded, not 1
     assert shard.shard_count(2, 8) == 2   # never more shards than points
+    assert shard.shard_count(1, 8) == 1   # single point -> vmap fallback
+    assert shard.pad_rows(8, 4) == 0
+    assert shard.pad_rows(7, 4) == 1
+    assert shard.pad_rows(6, 4) == 2
+    assert shard.pad_rows(3, 2) == 1
+
+
+def test_prime_batch_sharded_matches_unsharded_bitwise():
+    """Pad-and-mask path: a prime batch size still matches the plain vmap
+    on its valid rows (with one in-process device this exercises the
+    fallback; the subprocess test exercises the padded 2-device mesh)."""
+    spec, trace, points = _sweep_inputs(5)
+    params = engine.stack_params(points)
+    ref = engine.simulate_batch(spec, trace, params)
+    got = shard.simulate_batch_sharded(spec, trace, params)
+    _assert_results_equal(ref, got)
 
 
 def test_batch_size_validates():
@@ -225,7 +252,7 @@ def test_tournament_matches_sequential_cells():
     spec, trace, _ = _sweep_inputs()
     base = engine.CloudParams.for_spec(spec, pm_cores=4.0, boot_work=4.0)
     res = tournament.run(spec, trace, base)
-    assert len(res.rows) == 6  # full 3x2 grid by default
+    assert len(res.rows) == 9  # full 3x3 grid by default (incl. consolidate)
     for row in res.rows:
         single = engine.simulate(spec, trace, params=dataclasses.replace(
             base, vm_sched=row["vm_sched"], pm_sched=row["pm_sched"]))
@@ -263,7 +290,9 @@ def test_evaluate_schedulers_routes_through_tournament(monkeypatch):
     tr = ea.job_trace([ea.Job("a", "s", steps=50)], cells)
     rows = ea.evaluate_schedulers(tr, n_pods=2)
     assert calls, "evaluate_schedulers must run via tournament.run"
-    assert len(rows) == 6
+    assert len(rows) == 9  # 3 VM x 3 PM policies (incl. consolidate)
+    assert {r["pm_sched"] for r in rows} == {"alwayson", "ondemand",
+                                             "consolidate"}
     for row in rows:  # the fleet report keeps its meter-stack columns
         for key in ("energy_kwh", "job_kwh", "idle_kwh", "hvac_kwh",
                     "makespan_s", "jobs_done", "events"):
