@@ -1,20 +1,23 @@
-"""Consolidation-scheduler benchmark — the in-loop cross-layer policy's
-cost and payoff (repro.core.loop.consolidate).
+"""Consolidation/migration-policy benchmark — the in-loop cross-layer
+policies' cost and payoff (repro.sched.policies).
 
 Workload: waves of 16 simultaneous 16-core tasks on a 4x64-core cloud.
 Under first-fit each wave packs 4 tasks per PM; 12 are short and 4 —
 one per PM — are long stragglers, so once the shorts drain every PM hosts
 a single idle-dominated VM.  On-demand must keep all 4 machines up for
-the whole straggler tail; consolidate migrates the stragglers onto one
-host and powers the donors down.  The whole PM state-scheduler axis
-(always-on / on-demand / consolidate) x two VM schedulers runs as one
-sharded tournament batch — scheduler identity is ``CloudParams`` data, so
-the consolidation cells ride the same compiled program as the paper's
-baseline policies.  Rows report per-cell IT energy, the job-attributed
-share and the unattributed idle (the reading the policy exists to shed)
-plus a timing summary, snapshotted as ``BENCH_consolidation.json`` so both
-the policy's energy ordering and the staged pipeline's event throughput
-are tracked per PR."""
+the whole straggler tail; the migration policies pack the stragglers onto
+fewer hosts and power the donors down — ``consolidate`` one idle-triggered
+move per iteration, ``defrag`` bin-packing moves with no idle threshold,
+``evacuate`` draining a donor in one multi-move pass.  The whole
+registered PM state-scheduler axis x two VM schedulers runs as one
+sharded tournament batch — scheduler identity is ``CloudParams`` data
+(registry codes), so every migration-policy cell rides the same compiled
+program as the paper's baseline policies.  Rows report per-cell IT
+energy, the job-attributed share and the unattributed idle (the reading
+these policies exist to shed) plus a timing summary, snapshotted as
+``BENCH_consolidation.json`` so both the policy energy ordering
+(consolidate/defrag/evacuate <= ondemand <= ~alwayson here) and the
+staged pipeline's event throughput are tracked per PR."""
 from __future__ import annotations
 
 import time
@@ -25,9 +28,10 @@ import numpy as np
 
 from repro.core import engine
 from repro.experiments import shard, tournament
+from repro.sched import registry
 
 VM_SCHEDS = ("firstfit", "smallestfirst")
-PM_SCHEDS = ("alwayson", "ondemand", "consolidate")
+PM_SCHEDS = registry.names("pm")  # alwayson/ondemand/consolidate/defrag/...
 N_PM, PM_CORES, TASK_CORES = 4, 64.0, 16.0
 SHORT_S, TAIL_S, WAVE_GAP_S = 200.0, 4000.0, 5000.0
 

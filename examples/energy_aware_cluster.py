@@ -5,9 +5,10 @@ Reads the dry-run roofline artifacts (experiments/dryrun/) to characterise
 each (arch x shape) job, builds a mixed fleet trace, runs the scheduler
 *tournament* (the paper's matrix via repro.experiments.tournament), then a
 trace-*ensemble* experiment — mean ± CI per policy over seed-perturbed job
-mixes (docs/experiments.md) — then a live-migration consolidation demo
-(the in-loop ``pm_sched="consolidate"`` policy, DESIGN.md §5) and a
-per-tenant bill from the per-VM Eq. 6 meters.
+mixes (docs/experiments.md) — then a live-migration policy demo (the
+in-loop consolidate/defrag/evacuate PM schedulers, registry citizens from
+repro.sched.policies, DESIGN.md §5-§6) and a per-tenant bill from the
+per-VM Eq. 6 meters.
 
 Run:  PYTHONPATH=src python examples/energy_aware_cluster.py
 """
@@ -83,19 +84,21 @@ for r in er.rows:
           f"{r['makespan_s_mean']/3600:5.2f} ± {r['makespan_s_ci']/3600:4.2f} h")
 
 # ---------------------------------------------------------------- migration
-print("\n=== in-loop consolidation via live migration " + "=" * 21)
+print("\n=== in-loop live-migration PM policies " + "=" * 27)
 # Two 100-core machines.  Short wide tasks pin a long 25-core straggler to
-# PM1; once they drain, PM1 idles under one small VM.  The consolidate PM
-# scheduler watches the per-PM idle meter inside the engine loop, migrates
-# the straggler to PM0 and powers the donor down — no manual
-# start_migration call, and the whole policy axis is one batch.
+# PM1; once they drain, PM1 idles under one small VM.  The migration PM
+# policies (all ordinary registry codes — repro.sched.policies) watch the
+# cloud from *inside* the engine loop, move the straggler to PM0 and power
+# the donor down: consolidate/evacuate on the per-PM idle meter, defrag on
+# pure bin-packing.  No manual start_migration call, and the whole policy
+# axis is one batch.
 spec = engine.CloudSpec(n_pm=2, n_vm=8)
 ctrace = engine.Trace(
     arrival=jnp.asarray([0.0, 0.01, 0.02, 230.0], jnp.float32),
     cores=jnp.asarray([60.0, 35.0, 70.0, 25.0], jnp.float32),
     work=jnp.asarray([60e3 * 2, 7e3, 14e3, 50e3], jnp.float32))
 cbase = engine.CloudParams(pm_cores=100.0)
-pols = ("alwayson", "ondemand", "consolidate")
+pols = ("alwayson", "ondemand", "consolidate", "defrag", "evacuate")
 cres = engine.simulate_batch(
     spec, ctrace,
     engine.stack_params([dataclasses.replace(cbase, pm_sched=p)
@@ -105,14 +108,14 @@ for i, p in enumerate(pols):
     print(f"  {p:12s} {float(crd['iaas_total'][i])/3.6e6:7.3f} kWh  "
           f"idle {float(crd['vm_unattributed'][i])/3.6e6:6.3f} kWh  "
           f"makespan {float(cres.t_end[i]):7.0f} s")
-print("consolidate migrates the straggler off PM1 and switches the donor "
-      "off for the tail")
+print("the migration policies move the straggler off PM1 and switch the "
+      "donor off for the tail")
 
 # ------------------------------------------------------------------ billing
 print("\n=== per-tenant billing from the Eq. 6 meters " + "=" * 21)
 # the per-VM adjusted-aggregation meters are billing-grade: each tenant
 # pays the PM power its own VMs induced; unattributed idle stays with the
-# operator (docs/experiments.md §8)
+# operator (docs/experiments.md §9)
 rd_one = {k: v[2] for k, v in crd.items()}  # the consolidated run's row
 owner = np.full(spec.n_vm, -1, np.int32)
 owner[:4] = [0, 0, 1, 1]   # tasks dispatch in arrival order -> slots 0..3

@@ -24,16 +24,21 @@ import jax.numpy as jnp
 
 from . import machine as mc
 from .energy import PM_RUNNING, meter_readings
-from .engine import (CloudParams, CloudSpec, CloudState, PM_SCHEDULERS,
-                     TASK_ACTIVE, TASK_DONE, TASK_PENDING, TASK_REJECTED,
-                     Trace, VM_SCHEDULERS)
+from repro.sched import registry as _policy_registry
+
+from .engine import (CloudParams, CloudSpec, CloudState, TASK_ACTIVE,
+                     TASK_DONE, TASK_PENDING, TASK_REJECTED, Trace)
 
 
-def _sched_name(code, names: tuple[str, ...]) -> str:
+def _sched_name(code, layer: str) -> str:
     try:
-        return names[int(jnp.asarray(code))]
+        return _policy_registry.name_of(layer, int(jnp.asarray(code)))
     except (TypeError, jax.errors.ConcretizationTypeError):
         return "<traced>"
+    except KeyError:
+        # a code whose policy has been unregistered since the params were
+        # built — keep the diagnostic dict usable
+        return "<unregistered>"
 
 
 def cloud_info(spec: CloudSpec, params: CloudParams, st: CloudState,
@@ -63,8 +68,8 @@ def cloud_info(spec: CloudSpec, params: CloudParams, st: CloudState,
         "pm_load": [float(x) for x in (used / pm_cores)],
         "pm_vm_count": [int(x) for x in per_pm_vms],
         "queue_len": int(queued.sum()),
-        "vm_scheduler": _sched_name(params.vm_sched, VM_SCHEDULERS),
-        "pm_scheduler": _sched_name(params.pm_sched, PM_SCHEDULERS),
+        "vm_scheduler": _sched_name(params.vm_sched, "vm"),
+        "pm_scheduler": _sched_name(params.pm_sched, "pm"),
         "tasks_done": int((st.task_state == TASK_DONE).sum()),
         "tasks_rejected": int((st.task_state == TASK_REJECTED).sum()),
         "tasks_active": int((st.task_state == TASK_ACTIVE).sum()),

@@ -341,8 +341,8 @@ class MeterState(NamedTuple):
     pm_idle: MeterAccum     # [P] per-PM idle-component draw (state baseline
     #                         p_min — the work-unattributable share a
     #                         consolidation policy targets; its last_power
-    #                         is the live signal repro.core.loop.consolidate
-    #                         reads)
+    #                         is the live signal the migration PM policies
+    #                         in repro.sched.policies read)
 
     @staticmethod
     def zero(topology: MeterTopology, n_pm: int, n_vm: int) -> "MeterState":

@@ -49,12 +49,15 @@ explicit :class:`CloudState` / ``StageCtx`` protocol —
   transfer -> boot -> task -> optional migration) and the PM power-state
   machine (Table 1/2, incl. the *hidden consumer* complex model).
 * **pm_sched / vm_sched** — management (§3.5): policy hooks reading the
-  fresh ``SimView`` and live meter state.  First-fit / non-queuing /
-  smallest-first VM schedulers and always-on / on-demand / *consolidate*
-  PM schedulers as masked vector decisions selected by ``params.vm_sched``
-  / ``params.pm_sched`` integer codes — the whole scheduler matrix batches
-  through one compile.  ``consolidate`` adds in-loop live migration driven
-  by the per-PM idle meter (:mod:`repro.core.loop.consolidate`).
+  fresh ``SimView`` and live meter state.  Each stage ``lax.switch``es on
+  the ``params.vm_sched`` / ``params.pm_sched`` integer code over the open
+  policy registry (:mod:`repro.sched.registry`, DESIGN.md §6) — the codes
+  stay traced data, so the whole scheduler matrix batches through one
+  compile, and the policies themselves (first-fit / non-queuing /
+  smallest-first VM dispatchers; always-on / on-demand / consolidate /
+  defrag / evacuate PM state schedulers, the latter three with in-loop
+  live migration driven by the per-PM idle meter) are
+  :mod:`repro.sched.policies` citizens the core does not know by name.
 
 The per-entity capacities (PMs ``P``, VM slots ``V``, tasks ``T``) are
 static; overflow is reported, never silent.
@@ -74,12 +77,10 @@ from .energy import (PM_OFF, PM_RUNNING, PM_SWITCHING_OFF, PM_SWITCHING_ON,
                      MeterParams, MeterState, MeterTopology, PowerStateTable,
                      meter_readings)
 from .fairshare import SCHEDULERS
-from .loop.consolidate import migration_update
-from .loop.state import (BIG as _BIG, KIND_MIGRATE, PM_ALWAYSON,
-                         PM_CONSOLIDATE, PM_ONDEMAND, PM_SCHEDULERS,
-                         TASK_ACTIVE, TASK_DONE, TASK_PENDING, TASK_REJECTED,
-                         VM_FIRSTFIT, VM_NONQUEUING, VM_SCHEDULERS,
-                         VM_SMALLESTFIRST, CloudState)
+from .loop.migrate import migrate_one
+from .loop.state import (BIG as _BIG, KIND_MIGRATE, TASK_ACTIVE, TASK_DONE,
+                         TASK_PENDING, TASK_REJECTED, CloudState)
+from repro.sched import registry as _policy_registry
 
 __all__ = [
     "CloudSpec", "CloudParams", "CloudState", "CloudResult", "Trace",
@@ -87,6 +88,26 @@ __all__ = [
     "simulate_batch", "simulate_batch_sharded", "start_migration",
     "make_allocation", "VM_SCHEDULERS", "PM_SCHEDULERS",
 ]
+
+
+def __getattr__(name: str):
+    """Registry-backed views (PEP 562): ``VM_SCHEDULERS``/``PM_SCHEDULERS``
+    are the registered name tuples (index == code, never stale after a
+    ``repro.sched.registry.register`` call), and ``VM_<NAME>``/``PM_<NAME>``
+    resolve to the policy's stable integer code (``engine.PM_CONSOLIDATE``,
+    ``engine.VM_SMALLESTFIRST``, ...)."""
+    if name == "VM_SCHEDULERS":
+        return _policy_registry.names("vm")
+    if name == "PM_SCHEDULERS":
+        return _policy_registry.names("pm")
+    for prefix, layer in (("VM_", "vm"), ("PM_", "pm")):
+        if name.startswith(prefix):
+            try:
+                return _policy_registry.code_of(layer,
+                                                name[len(prefix):].lower())
+            except KeyError:
+                break
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,6 +125,8 @@ class CloudSpec:
     backend: str = "jnp"         # 'jnp' | 'pallas' segmented reductions
     max_events: int = 2_000_000
     max_fill_iters: int = 64
+    max_migrations: int = 4      # per-iteration move cap for multi-VM
+    #                              evacuation policies (static: plan length)
     meters: MeterTopology = MeterTopology()  # which meters exist (§3.3)
 
     def __post_init__(self):
@@ -116,9 +139,11 @@ class CloudSpec:
         return mc.SpreaderLayout(self.n_pm, self.n_vm)
 
 
-def _sched_code(value, names: tuple[str, ...]):
-    """Map a scheduler name to its integer code; range-check concrete codes;
-    pass traced/batched values through."""
+def _sched_code(value, layer: str):
+    """Map a scheduler name to its registered integer code
+    (:mod:`repro.sched.registry`); range-check concrete codes; pass
+    traced/batched values through."""
+    names = _policy_registry.names(layer)
     if isinstance(value, str):
         if value not in names:
             raise ValueError(f"unknown scheduler {value!r}; one of {names}")
@@ -173,9 +198,9 @@ class CloudParams:
 
     def __post_init__(self):
         object.__setattr__(self, "vm_sched",
-                           _sched_code(self.vm_sched, VM_SCHEDULERS))
+                           _sched_code(self.vm_sched, "vm"))
         object.__setattr__(self, "pm_sched",
-                           _sched_code(self.pm_sched, PM_SCHEDULERS))
+                           _sched_code(self.pm_sched, "pm"))
         if self.power is None:
             object.__setattr__(self, "power", PowerStateTable.simple())
         if self.meter is None:
@@ -277,9 +302,13 @@ def init_state(spec: CloudSpec, trace: Trace,
     F = V + P
     zf = jnp.zeros((F,), jnp.float32)
     zi = jnp.zeros((F,), jnp.int32)
-    # always-on clouds start running; on-demand and consolidate start off
-    # and wake machines against the queue deficit
-    start_running = params.pm_sched == PM_ALWAYSON
+    # policies registered with starts_running=True (always-on) begin with
+    # the fleet powered on; the rest start off and wake machines against
+    # the queue deficit
+    start_codes = _policy_registry.start_running_codes()
+    start_running = (jnp.isin(jnp.asarray(params.pm_sched),
+                              jnp.asarray(start_codes, jnp.int32))
+                     if start_codes else jnp.bool_(False))
     pstate0 = jnp.broadcast_to(
         jnp.where(start_running, PM_RUNNING, PM_OFF), (P,)).astype(jnp.int32)
     period = jnp.asarray(params.metering_period, jnp.float32)
@@ -412,14 +441,15 @@ def start_migration(spec: CloudSpec, params: CloudParams, st: CloudState,
     """Begin live-migrating VM slot ``v`` to PM ``dst`` (paper Fig. 6:
     running -> suspend-transfer/migrating -> resume on the new host).
 
-    The out-of-loop management API over the shared machinery in
-    :func:`repro.core.loop.consolidate.migration_update` — the in-loop
-    consolidation PM scheduler (``pm_sched="consolidate"``) issues the
-    identical update from inside the pipeline.  The caller must ensure the
+    The public out-of-loop shim over the one shared masked-migration
+    primitive (:func:`repro.core.loop.migrate.migrate_one`) — the in-loop
+    migration policies (``pm_sched="consolidate"``/``"defrag"``/
+    ``"evacuate"``, :mod:`repro.sched.policies`) issue the identical
+    update from inside the pipeline.  The caller must ensure the
     destination fits; cores move src->dst immediately (allocation
     semantics).
     """
-    st = migration_update(spec, params, st, v, dst, jnp.bool_(True))
+    st = migrate_one(spec, params, st, v, dst, jnp.bool_(True))
     return st._replace(running=jnp.bool_(True))
 
 

@@ -6,25 +6,28 @@ one module per subsystem:
 
 ========================  ===================================================
 :mod:`.state`             :class:`CloudState` / :class:`StageCtx` protocol,
-                          entity constants, scheduler-code registries
+                          entity constants
 :mod:`.advance`           unified resource sharing + clock-to-horizon (§3.1/2)
 :mod:`.observe`           the meter-stack observation hook (§3.3, PR 2)
 :mod:`.lifecycle`         VM state machine, Fig. 6 (incl. migration arrival)
 :mod:`.power`             PM power-state transitions (Table 1/2, Fig. 5)
-:mod:`.pm_sched`          PM policy hook: always-on / on-demand / consolidate
-:mod:`.vm_sched`          VM policy hook: first-fit / non-queuing / smallest
-:mod:`.consolidate`       the meter-driven consolidation policy + the shared
-                          live-migration machinery
+:mod:`.pm_sched`          PM policy hook: registry dispatch (DESIGN.md §6)
+:mod:`.vm_sched`          VM policy hook: registry dispatch + the shared
+                          queue-serving machinery
+:mod:`.migrate`           the shared masked live-migration primitive
 :mod:`.driver`            stage composition, progress guard, termination
 ========================  ===================================================
 
 Every stage is ``stage(ctx, st) -> (ctx, st)``: pure, masked-vectorised,
 ``vmap``/``shard_map``-compatible, and bit-identical in composition to the
-pre-refactor monolithic body for the pre-existing scheduler codes.
+pre-refactor monolithic body for the pre-existing scheduler codes.  The
+policies themselves — always-on/on-demand/consolidate/defrag/evacuate PM
+state schedulers, first-fit/non-queuing/smallest-first VM schedulers —
+live in :mod:`repro.sched.policies` and reach the loop only through the
+open registry (:mod:`repro.sched.registry`): the core knows no policy by
+name.
 """
 from .driver import STAGES, make_body, management_pass, termination  # noqa: F401
 from .state import (  # noqa: F401
-    BIG, KIND_MIGRATE, PM_ALWAYSON, PM_CONSOLIDATE, PM_ONDEMAND,
-    PM_SCHEDULERS, TASK_ACTIVE, TASK_DONE, TASK_PENDING, TASK_REJECTED,
-    VM_FIRSTFIT, VM_NONQUEUING, VM_SCHEDULERS, VM_SMALLESTFIRST, CloudState,
-    StageCtx)
+    BIG, KIND_MIGRATE, TASK_ACTIVE, TASK_DONE, TASK_PENDING, TASK_REJECTED,
+    CloudState, StageCtx)

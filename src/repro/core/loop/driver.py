@@ -7,9 +7,9 @@ One loop iteration is exactly the stage sequence :data:`STAGES`:
 followed by the :func:`termination` verdict.  The driver owns *no*
 simulation semantics — it snapshots the machine/task state for the
 progress guard, folds the state through the stages, and decides whether
-the ``lax.while_loop`` continues.  Policies and subsystems are added by
-editing the stage modules (or the policy registries they dispatch on),
-not this file.
+the ``lax.while_loop`` continues.  Subsystems are added by editing the
+stage modules; scheduling policies are added by registering them with
+:mod:`repro.sched.registry` — never by editing this package.
 """
 from __future__ import annotations
 
@@ -24,8 +24,8 @@ STAGES = (
     observe.observe_stage,  # §3.3 meter stack over [t0, t_new]
     lifecycle.vm_lifecycle,  # §3.4.3 Fig. 6 VM transitions (+ migration)
     power.pm_power,         # §3.4.2 PM power-state transitions
-    pm_sched.pm_sched,      # §3.5.1 PM policy hook (+ consolidation)
-    vm_sched.vm_sched,      # §3.5.1 VM policy hook (dispatch queue)
+    pm_sched.pm_sched,      # §3.5.1 PM policy hook (registry dispatch)
+    vm_sched.vm_sched,      # §3.5.1 VM policy hook (registry dispatch)
 )
 
 

@@ -1,99 +1,33 @@
 """Stage 5 — ``pm_sched``: the PM state-scheduler policy hook (§3.5.1).
 
-Dispatches on ``params.pm_sched`` (data — one compiled program covers the
-whole policy registry in :data:`repro.core.loop.state.PM_SCHEDULERS`):
-
-* ``alwayson`` — the identity (machines never change power state here);
-* ``ondemand`` — wake enough machines for the unmet queue, switch off
-  loadless machines when the queue is empty;
-* ``consolidate`` — on-demand's wake/sleep rules *plus* one meter-driven
-  live-migration decision per iteration
-  (:func:`repro.core.loop.consolidate.consolidation_step`), so donors
-  empty — and power down — before their last task would have finished.
+Pure dispatch: the stage reads ``params.pm_sched`` (an integer code —
+*data*, so heterogeneous cells batch through one compiled program) and
+``lax.switch``es over the branch list of the open policy registry
+(:mod:`repro.sched.registry`, DESIGN.md §6).  The core knows no policy by
+name — always-on, on-demand, consolidation, defragmentation, evacuation
+and any out-of-tree policy are all :mod:`repro.sched.policies` citizens
+registered under stable codes.
 
 The hook runs after the power/lifecycle stages of the pipeline with the
 fresh ``ctx.view`` / live ``st.meters`` published by ``observe``, which is
 what lets policies at this layer react to metering state without leaving
 the loop (the paper's cross-layer scheduling pitch, §1/§3.4).
 
-State delta: ``pstate`` / ``pstate_end`` (wake/sleep), the hidden-consumer
-flow slots under the complex power model, and — for consolidation moves —
-the migrating VM's slot and the src/dst ``free_cores``.
+State delta: whatever the selected policy's registered ``requires``
+metadata declares (wake/sleep transitions, hidden-consumer flow slots,
+migration rewrites of VM/flow state and ``free_cores``).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from .. import machine as mc
-from ..arrays import KIND_HIDDEN
-from ..energy import PM_OFF, PM_RUNNING, PM_SWITCHING_OFF, PM_SWITCHING_ON
-from .consolidate import consolidation_step
-from .state import PM_CONSOLIDATE, PM_ONDEMAND, TASK_PENDING, CloudState, \
-    StageCtx
+from repro.sched import registry
 
-
-def pm_scheduler(spec, params, trace, st: CloudState) -> CloudState:
-    """The masked wake/sleep pass shared by on-demand and consolidation."""
-    P = spec.n_pm
-    table = params.power
-    code = jnp.asarray(params.pm_sched)
-    managed = (code == PM_ONDEMAND) | (code == PM_CONSOLIDATE)
-    queued = (st.task_state == TASK_PENDING) & (trace.arrival <= st.t)
-    q_cores = jnp.sum(jnp.where(queued, trace.cores, 0.0))
-    soon = mc.pm_future_capacity(st.pstate)
-    cap_soon = jnp.sum(jnp.where(soon, st.free_cores, 0.0))
-    deficit = q_cores - cap_soon
-    k = jnp.ceil(jnp.maximum(deficit, 0.0) / params.pm_cores).astype(jnp.int32)
-
-    off = st.pstate == PM_OFF
-    wake = managed & off & (jnp.cumsum(off.astype(jnp.int32)) <= k)
-    # loadless running PMs sleep only when nothing is queued
-    hosted = jax.ops.segment_sum(
-        (st.vstage != mc.VM_FREE).astype(jnp.int32), st.vm_host,
-        num_segments=P)
-    idle = (managed & (st.pstate == PM_RUNNING) & (hosted == 0)
-            & ~queued.any())
-
-    boot_s = table.duration[PM_SWITCHING_ON]
-    halt_s = table.duration[PM_SWITCHING_OFF]
-    pstate = jnp.where(wake, PM_SWITCHING_ON, st.pstate)
-    pstate = jnp.where(idle, PM_SWITCHING_OFF, pstate)
-    pstate_end = jnp.where(wake, st.t + boot_s, st.pstate_end)
-    pstate_end = jnp.where(idle, st.t + halt_s, pstate_end)
-    st = st._replace(pstate=pstate, pstate_end=pstate_end)
-
-    if spec.complex_power:
-        # hidden consumer carries the transition work; transition ends when
-        # the hidden flow drains (pstate_end stays at +inf)
-        lay = spec.layout
-        V = spec.n_vm
-        hid = jnp.arange(P) + V  # flow-slot indices of hidden consumers
-        trans = wake | idle
-        amount = jnp.where(wake, params.hidden_work_on, params.hidden_work_off)
-        st = st._replace(
-            pstate_end=jnp.where(trans, jnp.inf, pstate_end),
-            f_pr=st.f_pr.at[hid].set(
-                jnp.where(trans, amount, st.f_pr[hid])),
-            f_total=st.f_total.at[hid].set(
-                jnp.where(trans, amount, st.f_total[hid])),
-            f_pl=st.f_pl.at[hid].set(
-                jnp.where(trans, 0.2 * params.pm_cores, st.f_pl[hid])),
-            f_prov=st.f_prov.at[hid].set(
-                jnp.where(trans, lay.cpu0 + jnp.arange(P), st.f_prov[hid])),
-            f_cons=st.f_cons.at[hid].set(
-                jnp.where(trans, lay.hidden0 + jnp.arange(P), st.f_cons[hid])),
-            f_active=st.f_active.at[hid].set(
-                jnp.where(trans, True, st.f_active[hid])),
-            f_release=st.f_release.at[hid].set(
-                jnp.where(trans, st.t, st.f_release[hid])),
-            f_kind=st.f_kind.at[hid].set(
-                jnp.where(trans, KIND_HIDDEN, st.f_kind[hid])),
-        )
-    return st
+from .state import CloudState, StageCtx
 
 
 def pm_sched(ctx: StageCtx, st: CloudState):
-    st = pm_scheduler(ctx.spec, ctx.params, ctx.trace, st)
-    st = consolidation_step(ctx.spec, ctx.params, st)
+    code = jnp.asarray(ctx.params.pm_sched, jnp.int32)
+    st = jax.lax.switch(code, registry.stage_branches("pm", ctx), st)
     return ctx, st

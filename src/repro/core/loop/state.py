@@ -34,14 +34,12 @@ TASK_ACTIVE = 1    # bound to a VM
 TASK_DONE = 2
 TASK_REJECTED = 3
 
-# VM/PM scheduler codes: index into these tuples == the CloudParams code.
-# This is the scheduler-code registry the management stages dispatch on —
-# policies are *data*, so a tournament over any subset of the matrix shares
-# one compiled program (DESIGN.md §1, §4).
-VM_SCHEDULERS = ("firstfit", "nonqueuing", "smallestfirst")
-PM_SCHEDULERS = ("alwayson", "ondemand", "consolidate")
-VM_FIRSTFIT, VM_NONQUEUING, VM_SMALLESTFIRST = range(3)
-PM_ALWAYSON, PM_ONDEMAND, PM_CONSOLIDATE = range(3)
+# VM/PM scheduler identity is an integer code into the open policy
+# registry (repro.sched.registry, DESIGN.md §6) — the management stages
+# lax.switch over the registered branch list, so policies are *data* and a
+# tournament over any subset of the matrix shares one compiled program
+# (DESIGN.md §1, §4).  The core holds no policy names: registered codes
+# and names come from registry.names("vm") / registry.names("pm").
 
 
 class CloudState(NamedTuple):

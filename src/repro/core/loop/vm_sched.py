@@ -1,9 +1,18 @@
 """Stage 6 — ``vm_sched``: the VM scheduler policy hook (§3.5.1).
 
-Serves the request queue until blocked or empty.  The scheduler identity
-is data (``params.vm_sched``): the queue key and the rejection rule are
-masked selections, so one compiled program covers first-fit, non-queuing
-and smallest-first.
+Pure dispatch, like ``pm_sched``: the stage ``lax.switch``es on
+``params.vm_sched`` over the registered branch list of the open policy
+registry (:mod:`repro.sched.registry`, DESIGN.md §6); the builtin
+first-fit / non-queuing / smallest-first policies live in
+:mod:`repro.sched.policies.baseline`.
+
+What stays here is the policy-free *machinery* those policies share:
+:func:`serve_queue`, the masked inner loop that serves the request queue
+until blocked or empty.  Its two knobs (queue ordering key, whether an
+unservable head is rejected) are plain Python flags — a policy is a
+partial application, and each specialisation is bitwise identical to the
+old data-masked selection because ``jnp.where`` on a concrete flag folds
+to the selected operand.
 
 State delta: per dispatched request, the allocated VM slot (``vstage`` /
 ``vm_*``), its image-transfer flow, the host's ``free_cores``, and the
@@ -14,17 +23,28 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.sched import registry
+
 from .. import machine as mc
 from ..arrays import KIND_IMAGE_XFER
 from .state import (BIG, TASK_ACTIVE, TASK_PENDING, TASK_REJECTED,
-                    VM_NONQUEUING, VM_SMALLESTFIRST, CloudState, StageCtx)
+                    CloudState, StageCtx)
 
 
-def dispatch_loop(spec, params, trace, st: CloudState) -> CloudState:
+def serve_queue(spec, params, trace, st: CloudState, *,
+                smallest_first: bool = False,
+                reject_unfit: bool = False) -> CloudState:
+    """Serve the request queue until blocked or empty.
+
+    ``smallest_first`` orders the queue by requested cores instead of
+    arrival time; ``reject_unfit`` rejects a head request no running host
+    can currently fit (the paper's non-queuing cloud) instead of leaving
+    it queued.  Oversized requests (larger than one PM) are always
+    rejected.
+    """
     lay = spec.layout
     P, V, T = spec.n_pm, spec.n_vm, trace.n
-    is_smallest = jnp.asarray(params.vm_sched) == VM_SMALLESTFIRST
-    is_nonqueue = jnp.asarray(params.vm_sched) == VM_NONQUEUING
+    qkey = trace.cores if smallest_first else trace.arrival
 
     def queued_mask(task_state):
         return (task_state == TASK_PENDING) & (trace.arrival <= st.t)
@@ -37,9 +57,7 @@ def dispatch_loop(spec, params, trace, st: CloudState) -> CloudState:
         st2, _ = s
         queued = queued_mask(st2.task_state)
         any_q = queued.any()
-        key = jnp.where(queued,
-                        jnp.where(is_smallest, trace.cores, trace.arrival),
-                        jnp.inf)
+        key = jnp.where(queued, qkey, jnp.inf)
         head = jnp.argmin(key).astype(jnp.int32)
         h_cores = trace.cores[head]
 
@@ -51,7 +69,8 @@ def dispatch_loop(spec, params, trace, st: CloudState) -> CloudState:
         any_v = vfree.any()
         v = jnp.argmax(vfree).astype(jnp.int32)
 
-        do_reject = any_q & (oversize | (is_nonqueue & ~any_fit))
+        blocked = oversize | ~any_fit if reject_unfit else oversize
+        do_reject = any_q & blocked
         do_dispatch = any_q & ~do_reject & any_fit & any_v
         overflow = any_q & ~do_reject & any_fit & ~any_v
 
@@ -93,5 +112,6 @@ def dispatch_loop(spec, params, trace, st: CloudState) -> CloudState:
 
 
 def vm_sched(ctx: StageCtx, st: CloudState):
-    st = dispatch_loop(ctx.spec, ctx.params, ctx.trace, st)
+    code = jnp.asarray(ctx.params.vm_sched, jnp.int32)
+    st = jax.lax.switch(code, registry.stage_branches("vm", ctx), st)
     return ctx, st

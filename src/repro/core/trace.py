@@ -16,6 +16,7 @@ deliberate deviation (no network access).
 from __future__ import annotations
 
 import dataclasses
+import zlib
 
 import numpy as np
 
@@ -88,7 +89,10 @@ def gwa_like_trace(
     import jax.numpy as jnp
 
     fam = GWA_FAMILIES[family]
-    rng = np.random.RandomState(seed ^ hash(family) & 0x7FFFFFFF)
+    # stable per-family seed: crc32, not hash() — identical traces in every
+    # process, no PYTHONHASHSEED pinning needed for golden comparisons
+    rng = np.random.RandomState(
+        seed ^ zlib.crc32(family.encode()) & 0x7FFFFFFF)
     inter = fam.interarrival_scale * rng.weibull(fam.interarrival_shape, n_tasks)
     arrival = np.cumsum(inter).astype(np.float32)
     runtime = np.exp(rng.normal(fam.runtime_logmean, fam.runtime_logstd,

@@ -2,13 +2,16 @@
 
 The paper's §4 methodology compares VM schedulers against PM
 state-schedulers cell by cell; since scheduler identity is
-``CloudParams`` *data* (integer codes), any grid of
-(``vm_sched``, ``pm_sched``) cells — the paper's 3x2, or every registered
-pair at much larger cloud sizes — runs as a single (sharded)
-``simulate_batch`` call and is scored from the meter stack
-(DESIGN.md §4).  :func:`repro.sched.energy_aware.evaluate_schedulers` is a
-thin wrapper over :func:`run` — this is the one code path for scheduler
-comparison, not a demo.
+``CloudParams`` *data* (integer codes into the open policy registry,
+DESIGN.md §6), any grid of (``vm_sched``, ``pm_sched``) cells — the
+paper's 3x2, or every registered pair at much larger cloud sizes — runs
+as a single (sharded) ``simulate_batch`` call and is scored from the
+meter stack (DESIGN.md §4).  The default axes come straight from
+:func:`repro.sched.registry.names`: registering a policy makes it a
+tournament citizen with no further wiring.
+:func:`repro.sched.energy_aware.evaluate_schedulers` is a thin wrapper
+over :func:`run` — this is the one code path for scheduler comparison,
+not a demo.
 """
 from __future__ import annotations
 
@@ -19,21 +22,28 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import engine
+from repro.sched import registry
 
 from . import shard
 
 
-def scheduler_grid(vm_scheds: Sequence[str | int] = engine.VM_SCHEDULERS,
-                   pm_scheds: Sequence[str | int] = engine.PM_SCHEDULERS
+def scheduler_grid(vm_scheds: Sequence[str | int] | None = None,
+                   pm_scheds: Sequence[str | int] | None = None
                    ) -> list[tuple]:
-    """The full cross product of VM x PM scheduler cells (defaults to every
-    registered policy — the paper's 3x2 matrix plus the consolidation PM
-    scheduler, i.e. 3x3)."""
+    """The full cross product of VM x PM scheduler cells.  Each axis
+    defaults to *every* registered policy of its layer
+    (:func:`repro.sched.registry.names`) — the paper's 3x2 matrix plus
+    the consolidate/defrag/evacuate PM schedulers, i.e. 3x5, growing
+    automatically with out-of-tree registrations."""
+    if vm_scheds is None:
+        vm_scheds = registry.names("vm")
+    if pm_scheds is None:
+        pm_scheds = registry.names("pm")
     return [(v, p) for v in vm_scheds for p in pm_scheds]
 
 
-def _sched_name(value, names: tuple[str, ...]) -> str:
-    return value if isinstance(value, str) else names[int(value)]
+def _sched_name(value, layer: str) -> str:
+    return value if isinstance(value, str) else registry.name_of(layer, value)
 
 
 class TournamentResult(NamedTuple):
@@ -67,8 +77,8 @@ def run(spec: engine.CloudSpec, trace: engine.Trace,
         completion = res.completion[b]
         done = jnp.isfinite(completion)
         row = {
-            "vm_sched": _sched_name(vm_sched, engine.VM_SCHEDULERS),
-            "pm_sched": _sched_name(pm_sched, engine.PM_SCHEDULERS),
+            "vm_sched": _sched_name(vm_sched, "vm"),
+            "pm_sched": _sched_name(pm_sched, "pm"),
             "energy_kwh": float(readings["iaas_total"][b]) / 3.6e6,
             "makespan_s": float(res.t_end[b]),
             "jobs_done": int(done.sum()),

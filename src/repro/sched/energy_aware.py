@@ -13,9 +13,11 @@ architectures:
    DISSECT-CF task trace — work is measured in chip-seconds, a "PM" is a
    256-chip pod, a "VM request" is a job's pod reservation (image transfer
    models container/weights staging);
-3. :func:`evaluate_schedulers` sweeps the scheduler matrix (first-fit /
-   smallest-first / non-queuing VM schedulers x always-on / on-demand /
-   consolidate PM schedulers) through the tournament experiment
+3. :func:`evaluate_schedulers` sweeps the scheduler matrix (every
+   registered VM x PM policy pair — the registry's first-fit /
+   non-queuing / smallest-first VM schedulers x always-on / on-demand /
+   consolidate / defrag / evacuate PM schedulers, plus any out-of-tree
+   registration) through the tournament experiment
    (:mod:`repro.experiments.tournament` — one sharded
    :func:`repro.core.engine.simulate_batch` call; scheduler identity is a
    ``CloudParams`` code, so the whole matrix shares a single compile) and
@@ -152,18 +154,19 @@ def evaluate_schedulers(trace: engine.Trace, *, n_pods: int = 8,
 
     A thin wrapper over the tournament experiment
     (:func:`repro.experiments.tournament.run`): scheduler choice is data
-    (``CloudParams.vm_sched`` / ``pm_sched`` integer codes), so the whole
-    matrix — the default 3x3 (the paper's 3x2 plus the meter-driven
-    ``consolidate`` PM policy), or any grid via ``schedulers`` — runs as a
-    single sharded :func:`repro.core.engine.simulate_batch` call, one
-    compile for every cell.  Each row reports ``job_kwh`` / ``idle_kwh``
-    from the per-VM Eq. 6 meters, so the consolidation rows show directly
-    how much unattributed idle the migrations shed."""
+    (``CloudParams.vm_sched`` / ``pm_sched`` integer codes into the open
+    policy registry), so the whole matrix — by default every registered
+    policy pair (the paper's 3x2 plus the meter-driven consolidate /
+    defrag / evacuate PM policies, i.e. 3x5 — and any policy registered
+    through :mod:`repro.sched.registry` joins automatically), or any grid
+    via ``schedulers`` — runs as a single sharded
+    :func:`repro.core.engine.simulate_batch` call, one compile for every
+    cell.  Each row reports ``job_kwh`` / ``idle_kwh`` from the per-VM
+    Eq. 6 meters, so the migration-policy rows show directly how much
+    unattributed idle the moves shed."""
     from repro.experiments import tournament
     if schedulers is None:
-        schedulers = tournament.scheduler_grid(
-            ("firstfit", "smallestfirst", "nonqueuing"),
-            ("alwayson", "ondemand", "consolidate"))
+        schedulers = tournament.scheduler_grid()
     spec = engine.CloudSpec(n_pm=n_pods, n_vm=max(int(trace.n), 8))
     return tournament.run(spec, trace, fleet_params(),
                           schedulers=schedulers, sharded=sharded).rows

@@ -1,0 +1,31 @@
+"""Builtin scheduler policies, registered through the open registry
+(:mod:`repro.sched.registry`) — the proof that the simulator core knows no
+policy by name.
+
+Importing this package registers, in stable code order:
+
+========  =====  ==================================================
+layer     code   policy
+========  =====  ==================================================
+``vm``    0      ``firstfit`` — queueing first-fit dispatch
+``vm``    1      ``nonqueuing`` — reject requests that cannot start
+``vm``    2      ``smallestfirst`` — serve the smallest queued task
+``pm``    0      ``alwayson`` — the identity: machines never change
+``pm``    1      ``ondemand`` — wake against the queue, sleep loadless
+``pm``    2      ``consolidate`` — on-demand + one idle-meter-driven
+                 live migration per iteration
+``pm``    3      ``defrag`` — on-demand + bin-packing migrations
+                 toward the most-loaded feasible host
+``pm``    4      ``evacuate`` — on-demand + multi-VM donor drain (up
+                 to ``CloudSpec.max_migrations`` moves per iteration)
+========  =====  ==================================================
+
+Codes are append-only (DESIGN.md §6): new builtins go after ``evacuate``,
+out-of-tree policies take the next code at import time.
+"""
+from . import baseline, consolidate, defrag, evacuate  # noqa: F401
+from .. import registry as _registry
+
+# must stay the last statement: arms the builtin-unregister protection
+# only once every builtin above actually registered
+_registry._builtins_loaded()

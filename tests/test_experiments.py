@@ -252,7 +252,8 @@ def test_tournament_matches_sequential_cells():
     spec, trace, _ = _sweep_inputs()
     base = engine.CloudParams.for_spec(spec, pm_cores=4.0, boot_work=4.0)
     res = tournament.run(spec, trace, base)
-    assert len(res.rows) == 9  # full 3x3 grid by default (incl. consolidate)
+    # full registry grid by default: 3 VM x 5 PM policies
+    assert len(res.rows) == 15
     for row in res.rows:
         single = engine.simulate(spec, trace, params=dataclasses.replace(
             base, vm_sched=row["vm_sched"], pm_sched=row["pm_sched"]))
@@ -290,9 +291,10 @@ def test_evaluate_schedulers_routes_through_tournament(monkeypatch):
     tr = ea.job_trace([ea.Job("a", "s", steps=50)], cells)
     rows = ea.evaluate_schedulers(tr, n_pods=2)
     assert calls, "evaluate_schedulers must run via tournament.run"
-    assert len(rows) == 9  # 3 VM x 3 PM policies (incl. consolidate)
+    assert len(rows) == 15  # 3 VM x 5 PM policies (the full registry grid)
     assert {r["pm_sched"] for r in rows} == {"alwayson", "ondemand",
-                                             "consolidate"}
+                                             "consolidate", "defrag",
+                                             "evacuate"}
     for row in rows:  # the fleet report keeps its meter-stack columns
         for key in ("energy_kwh", "job_kwh", "idle_kwh", "hvac_kwh",
                     "makespan_s", "jobs_done", "events"):

@@ -1,0 +1,160 @@
+"""The open scheduler-policy registry (PR 5, DESIGN.md §6).
+
+Covers the ISSUE-5 satellite list: register -> dispatch -> unregister
+round-trip, duplicate-code rejection, and the bitwise no-op guarantee —
+registering a never-triggering policy leaves every existing scheduler
+code bit-identical on seed traces, batched and sequential.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine as eng
+from repro.sched import registry
+
+
+def _trace():
+    return eng.Trace(
+        arrival=jnp.asarray([0.0, 0.01, 0.02, 230.0], jnp.float32),
+        cores=jnp.asarray([60.0, 35.0, 70.0, 25.0], jnp.float32),
+        work=jnp.asarray([60 * 2000.0, 35 * 200.0, 70 * 200.0, 25 * 2000.0],
+                         jnp.float32))
+
+
+def _noop(spec, params, ctx, st):
+    return st
+
+
+@pytest.fixture
+def clean_registry():
+    """Roll back any policies a test leaves behind (codes are append-only,
+    so rollback = unregister down to the builtin count)."""
+    before = {layer: len(registry.names(layer)) for layer in registry.LAYERS}
+    yield
+    for layer, n in before.items():
+        while len(registry.names(layer)) > n:
+            registry.unregister(layer, len(registry.names(layer)) - 1)
+
+
+# ------------------------------------------------------------- metadata
+
+def test_builtin_policies_registered_in_stable_code_order():
+    assert registry.names("vm") == ("firstfit", "nonqueuing", "smallestfirst")
+    assert registry.names("pm")[:5] == (
+        "alwayson", "ondemand", "consolidate", "defrag", "evacuate")
+    for layer in registry.LAYERS:
+        for i, pol in enumerate(registry.policies(layer)):
+            assert pol.code == i and pol.layer == layer
+            assert set(pol.requires) <= set(eng.CloudState._fields)
+    # engine's registry-backed views agree (PEP 562 module attrs)
+    assert eng.VM_SCHEDULERS == registry.names("vm")
+    assert eng.PM_SCHEDULERS == registry.names("pm")
+    assert eng.PM_CONSOLIDATE == 2 and eng.PM_DEFRAG == 3
+    assert eng.VM_SMALLESTFIRST == 2
+    assert registry.start_running_codes() == (0,)  # alwayson only
+
+
+def test_lookup_by_code_and_name():
+    pol = registry.get("pm", "consolidate")
+    assert pol is registry.get("pm", 2)
+    assert registry.code_of("pm", "evacuate") == 4
+    assert registry.name_of("vm", 1) == "nonqueuing"
+    with pytest.raises(KeyError, match="unknown pm policy"):
+        registry.get("pm", "nosuch")
+    with pytest.raises(KeyError, match="unknown vm policy code"):
+        registry.get("vm", 99)
+    with pytest.raises(ValueError, match="unknown scheduler layer"):
+        registry.names("gpu")
+
+
+# ------------------------------------------------- round-trip + rejection
+
+def test_register_dispatch_unregister_round_trip(clean_registry):
+    n_before = len(registry.names("pm"))
+    pol = registry.register("pm", "testnoop", _noop, doc="identity")
+    assert pol.code == n_before
+    assert registry.names("pm")[-1] == "testnoop"
+    assert eng.PM_TESTNOOP == pol.code  # engine view picks it up live
+
+    # dispatch: the new code is a CloudParams citizen end to end.  The
+    # no-op policy never wakes a machine, so with an on-demand-free fleet
+    # nothing can run — behaviour must equal the other do-nothing-but-
+    # start-off scenario: everything stays off, tasks stay pending.
+    spec, params = eng.make_cloud(n_pm=2, n_vm=8, pm_cores=100.0,
+                                  pm_sched="testnoop")
+    assert int(params.pm_sched) == pol.code
+    res = eng.simulate(spec, _trace(), params=params)
+    assert (np.asarray(res.state.pstate) == 0).all()  # fleet never woke
+    assert not bool(np.asarray(res.rejected).any())
+
+    removed = registry.unregister("pm", "testnoop")
+    assert removed.code == pol.code
+    assert len(registry.names("pm")) == n_before
+    with pytest.raises(ValueError, match="unknown scheduler"):
+        eng.CloudParams(pm_sched="testnoop")
+
+
+def test_duplicate_code_and_name_rejected(clean_registry):
+    n = len(registry.names("pm"))
+    registry.register("pm", "dupcheck", _noop)
+    with pytest.raises(ValueError, match="duplicate pm policy code"):
+        registry.register("pm", "other", _noop, code=n)
+    with pytest.raises(ValueError, match="duplicate pm policy code"):
+        registry.register("pm", "other", _noop, code=0)
+    with pytest.raises(ValueError, match="duplicate pm policy name"):
+        registry.register("pm", "dupcheck", _noop)
+    with pytest.raises(ValueError, match="contiguous"):
+        registry.register("pm", "gapped", _noop, code=n + 5)
+
+
+def test_unregister_protects_builtins_and_order(clean_registry):
+    with pytest.raises(ValueError, match="builtin"):
+        registry.unregister("pm", "ondemand")
+    a = registry.register("pm", "stack_a", _noop)
+    registry.register("pm", "stack_b", _noop)
+    with pytest.raises(ValueError, match="most recently registered"):
+        registry.unregister("pm", a.code)
+    registry.unregister("pm", "stack_b")
+    registry.unregister("pm", "stack_a")
+
+
+def test_register_validates_requires_and_fn(clean_registry):
+    with pytest.raises(ValueError, match="unknown CloudState field"):
+        registry.register("pm", "badreq", _noop, requires=("not_a_field",))
+    with pytest.raises(TypeError, match="callable"):
+        registry.register("pm", "notfn", 42)
+
+
+# ------------------------------------------------- bitwise no-op guarantee
+
+def test_registering_policy_is_bitwise_noop_for_existing_codes(clean_registry):
+    """A freshly registered (never-selected) policy must not perturb any
+    existing scheduler code by a single bit — sequential and batched —
+    even though the engine retraces over the longer branch list."""
+    tr = _trace()
+    spec, base = eng.make_cloud(n_pm=2, n_vm=8, pm_cores=100.0)
+    pm_codes = range(len(registry.names("pm")))
+    pts = [dataclasses.replace(base, pm_sched=p) for p in pm_codes]
+
+    def snapshot():
+        seq = [eng.simulate(spec, tr, params=pt) for pt in pts]
+        batched = eng.simulate_batch(spec, tr, eng.stack_params(pts))
+        return [np.asarray(l) for r in seq + [batched]
+                for l in jax.tree.leaves(r)]
+
+    before = snapshot()
+    registry.register("pm", "neverfires", _noop)
+    registry.register("vm", "neverfires", _noop)
+    after = snapshot()
+    assert len(before) == len(after)
+    for a, b in zip(before, after):
+        np.testing.assert_array_equal(a, b)
+
+    # ... and unregistering restores the original branch list bitwise too
+    registry.unregister("vm", "neverfires")
+    registry.unregister("pm", "neverfires")
+    for a, b in zip(before, snapshot()):
+        np.testing.assert_array_equal(a, b)
