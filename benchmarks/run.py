@@ -19,6 +19,11 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     quick = not args.full
 
+    # Persistent XLA cache: repeat benchmark invocations (CI, sweeps) pay
+    # the engine's compile wall once per jax version instead of per run.
+    from repro.core import compile_cache
+    compile_cache.enable()
+
     from benchmarks import (consolidation_bench, energy_overhead,
                             ensemble_bench, pareto_bench, roofline, scaling,
                             sched_bench, sharing_perf, sweep_bench,
@@ -54,8 +59,8 @@ def main(argv=None) -> int:
             failures += 1
         wall = time.time() - t0
         (outdir / f"{name}.json").write_text(json.dumps(rows, indent=1))
-        if (name in ("sweep", "pareto", "ensemble", "consolidation")
-                and status == "ok"):
+        if (name in ("sweep", "scaling", "pareto", "ensemble",
+                     "consolidation") and status == "ok"):
             # stable perf-trajectory artifacts: events/sec of the batched
             # sweep, the sharded experiment kinds and the consolidation
             # tournament (only on success — never clobber the trajectory

@@ -1,4 +1,5 @@
-"""Fig. 13 + Fig. 15 — scaling-ratio analyses.
+"""Fig. 13 + Fig. 15 — scaling-ratio analyses, plus the engine
+throughput-scaling grid.
 
 Fig. 13: the paper's scaling-ratio function
 ``s(k, rho, n, d) = sigma(k, rho, n, d) / (n * sigma(k, rho, 1, d))``
@@ -8,12 +9,18 @@ headline claim for DISSECT-CF: it never drops below linear).
 
 Fig. 15: infrastructure-size scaling — aggregated runtime for GWA-like
 traces while sweeping the simulated machine count, compared via Eq. 17.
+
+Throughput grid: simulated events/second versus infrastructure size
+(``n_pm`` x ``n_vm``) — the driver snapshots this as ``BENCH_scaling.json``
+so PRs can track how event-loop throughput scales with the spreader count,
+not just at the sweep_bench point.
 """
 from __future__ import annotations
 
 import time
 
 import jax
+import numpy as np
 
 from repro.core import engine
 from repro.core.trace import filter_fitting, gwa_like_trace, synthetic_trace
@@ -78,5 +85,38 @@ def fig15_infra_scaling(quick=True) -> list[dict]:
     return rows
 
 
+def throughput_grid(quick=True) -> list[dict]:
+    """Simulated events/second over an (n_pm, n_vm) infrastructure grid."""
+    grid = ((5, 256), (20, 256), (20, 1024)) if quick else (
+        (5, 256), (20, 256), (20, 1024), (100, 2048), (500, 4096))
+    n_tasks = 200 if quick else 2000
+    rows = []
+    for n_pm, n_vm in grid:
+        trace = filter_fitting(gwa_like_trace("das2", n_tasks, seed=7), 64.0)
+        spec, params = engine.make_cloud(n_pm=n_pm, n_vm=n_vm,
+                                         pm_cores=64.0,
+                                         max_events=4_000_000)
+        t0 = time.time()
+        jax.block_until_ready(
+            engine.simulate(spec, trace, params=params).t_end)
+        compile_wall = time.time() - t0
+        t0 = time.time()
+        res = engine.simulate(spec, trace, params=params)
+        jax.block_until_ready(res.t_end)
+        wall = time.time() - t0
+        events = int(np.asarray(res.n_events))
+        rows.append({
+            "name": "throughput_grid",
+            "n_pm": n_pm, "n_vm": n_vm, "tasks": int(trace.n),
+            "spreaders": int(spec.layout.S),
+            "compile_wall_s": round(compile_wall, 4),
+            "wall_s": round(wall, 4),
+            "events": events,
+            "events_per_s": round(events / wall, 1),
+        })
+    return rows
+
+
 def run(quick=True) -> list[dict]:
-    return fig13_scaling_ratio(quick) + fig15_infra_scaling(quick)
+    return (fig13_scaling_ratio(quick) + fig15_infra_scaling(quick)
+            + throughput_grid(quick))

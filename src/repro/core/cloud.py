@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from . import machine as mc
-from .energy import PM_RUNNING, meter_readings
+from .energy import PM_OFF, PM_RUNNING, meter_readings
 from repro.sched import registry as _policy_registry
 
 from .engine import (CloudParams, CloudSpec, CloudState, TASK_ACTIVE,
@@ -101,7 +101,7 @@ def deregister_pm(spec: CloudSpec, params: CloudParams, st: CloudState,
         vstage=jnp.where(victim, mc.VM_FREE, st.vstage),
         f_active=st.f_active.at[:V].set(
             jnp.where(victim, False, st.f_active[:V])),
-        pstate=st.pstate.at[pm].set(jnp.int32(0)),  # PM_OFF
+        pstate=st.pstate.at[pm].set(PM_OFF),
         free_cores=st.free_cores.at[pm].set(
             jnp.asarray(params.pm_cores, jnp.float32)),
         running=jnp.bool_(True),

@@ -71,6 +71,7 @@ from typing import NamedTuple, Sequence
 import jax
 import jax.numpy as jnp
 
+from . import compile_cache as _compile_cache
 from . import loop
 from . import machine as mc
 from .energy import (PM_OFF, PM_RUNNING, PM_SWITCHING_OFF, PM_SWITCHING_ON,
@@ -81,6 +82,11 @@ from .loop.migrate import migrate_one
 from .loop.state import (BIG as _BIG, KIND_MIGRATE, TASK_ACTIVE, TASK_DONE,
                          TASK_PENDING, TASK_REJECTED, CloudState)
 from repro.sched import registry as _policy_registry
+
+# Opt-in persistent XLA cache (REPRO_XLA_CACHE_DIR): makes the first
+# engine compile of a process a disk hit instead of a multi-minute trace
+# (DESIGN.md §7).  A no-op unless the env var is set.
+_compile_cache.enable_from_env()
 
 __all__ = [
     "CloudSpec", "CloudParams", "CloudState", "CloudResult", "Trace",
@@ -302,6 +308,11 @@ def init_state(spec: CloudSpec, trace: Trace,
     F = V + P
     zf = jnp.zeros((F,), jnp.float32)
     zi = jnp.zeros((F,), jnp.int32)
+    # Discrete enum fields are int8: every write site assigns weak-typed
+    # python constants (jnp.where / .at[].set keep the array dtype), and
+    # the value range is tiny (power states 0-3, VM stages 0-9, flow kinds
+    # 0-5).  Index fields (f_prov/f_cons/task_vm/...) stay int32.
+    zk = jnp.zeros((F,), jnp.int8)
     # policies registered with starts_running=True (always-on) begin with
     # the fleet powered on; the rest start off and wake machines against
     # the queue deficit
@@ -310,16 +321,16 @@ def init_state(spec: CloudSpec, trace: Trace,
                               jnp.asarray(start_codes, jnp.int32))
                      if start_codes else jnp.bool_(False))
     pstate0 = jnp.broadcast_to(
-        jnp.where(start_running, PM_RUNNING, PM_OFF), (P,)).astype(jnp.int32)
+        jnp.where(start_running, PM_RUNNING, PM_OFF), (P,)).astype(jnp.int8)
     period = jnp.asarray(params.metering_period, jnp.float32)
     return CloudState(
         t=jnp.float32(0.0), t_c=jnp.float32(0.0), n_events=jnp.int32(0),
         f_pr=zf, f_total=zf, f_pl=zf + _BIG, f_prov=zi, f_cons=zi,
-        f_active=jnp.zeros((F,), bool), f_release=zf, f_kind=zi,
-        task_state=jnp.full((T,), TASK_PENDING, jnp.int32),
+        f_active=jnp.zeros((F,), bool), f_release=zf, f_kind=zk,
+        task_state=jnp.full((T,), TASK_PENDING, jnp.int8),
         task_vm=jnp.full((T,), -1, jnp.int32),
         t_done=jnp.full((T,), jnp.inf, jnp.float32),
-        vstage=jnp.full((V,), mc.VM_FREE, jnp.int32),
+        vstage=jnp.full((V,), mc.VM_FREE, jnp.int8),
         vm_task=jnp.full((V,), -1, jnp.int32),
         vm_host=jnp.zeros((V,), jnp.int32),
         vm_cores=jnp.zeros((V,), jnp.float32),
@@ -365,12 +376,18 @@ def _simulate_impl(spec: CloudSpec, trace: Trace, params: CloudParams,
     )
 
 
-@functools.partial(jax.jit, static_argnames=("spec",))
+@functools.partial(jax.jit, static_argnames=("spec",),
+                   donate_argnames=("state",))
 def simulate(spec: CloudSpec, trace: Trace,
              params: CloudParams | None = None,
              state: CloudState | None = None,
              t_stop: float | jax.Array = jnp.inf) -> CloudResult:
-    """Run the cloud to completion (or ``t_stop`` — Timed.simulateUntil)."""
+    """Run the cloud to completion (or ``t_stop`` — Timed.simulateUntil).
+
+    A caller-provided ``state`` is *donated*: its buffers are reused for
+    the result's carried state and must not be read again afterwards (copy
+    with ``jax.tree.map(jnp.copy, st)`` to keep a live snapshot).
+    """
     if params is None:
         params = CloudParams.for_spec(spec)
     return _simulate_impl(spec, trace, params, state, t_stop)

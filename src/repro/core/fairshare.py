@@ -85,10 +85,17 @@ def _jnp_fill_stats(provider, consumer, r, live, unfrozen, perf):
     S = perf.shape[0]
     rl = jnp.where(live, r, 0.0)
     uf = unfrozen.astype(jnp.float32)
-    committed_p = _segment_sum(rl, provider, S)
-    committed_c = _segment_sum(rl, consumer, S)
-    cnt_p = _segment_sum(uf, provider, S)
-    cnt_c = _segment_sum(uf, consumer, S)
+    # One scatter-add covers all four segmented stats: provider-side rows
+    # land in segments [0, S), consumer-side rows in [S, 2S), and the two
+    # data columns carry (committed rate, unfrozen count).  Segments are
+    # disjoint and rows keep their index order, so every stat is
+    # bit-identical to its standalone segment_sum.
+    ids = jnp.concatenate([provider, consumer + S])
+    data = jnp.stack([jnp.concatenate([rl, rl]),
+                      jnp.concatenate([uf, uf])], axis=-1)
+    stats = _segment_sum(data, ids, 2 * S)
+    committed_p, cnt_p = stats[:S, 0], stats[:S, 1]
+    committed_c, cnt_c = stats[S:, 0], stats[S:, 1]
     avail_p = jnp.maximum(perf - committed_p, 0.0)
     avail_c = jnp.maximum(perf - committed_c, 0.0)
     dp = jnp.where(cnt_p > 0, avail_p / jnp.maximum(cnt_p, 1.0), _BIG)
@@ -116,11 +123,18 @@ def maxmin_rates(
     bottleneck levels is bounded by the spreader count, so ``max_iters``
     bounds compile-time work without changing results in practice.
 
-    ``backend='pallas'`` routes the segmented reductions through the Pallas
-    TPU kernel (see ``repro.kernels.maxmin``); ``'jnp'`` uses segment_sum.
+    ``backend='pallas'`` solves the whole progressive filling in one fused
+    kernel when the problem fits VMEM (``repro.kernels.maxmin.maxmin_solve``
+    — the carried rate/freeze vectors never round-trip HBM between rounds),
+    falling back to the round-wise Pallas ``fill_stats`` kernel above that
+    size; ``'jnp'`` uses segment_sum throughout.
     """
     if backend == "pallas":
         from repro.kernels import ops as _kops
+        if _kops.maxmin_solve_fits(provider.shape[0], perf.shape[0]):
+            return _kops.maxmin_solve_pallas(
+                provider, consumer, p_l, live, perf,
+                max_iters=max_iters, rel_eps=rel_eps)
         fill_stats = _kops.fill_stats_pallas
     else:
         fill_stats = _jnp_fill_stats

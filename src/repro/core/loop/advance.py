@@ -21,7 +21,7 @@ from .. import machine as mc
 from ..energy import (PM_OFF, PM_RUNNING, PM_SWITCHING_OFF, PM_SWITCHING_ON,
                       kahan_add)
 from ..fairshare import SCHEDULERS
-from .state import BIG, TASK_PENDING, CloudState, StageCtx
+from .state import BIG, TASK_PENDING, CloudState, StageCtx, live_threshold
 
 
 def spreader_perf(spec, params, st: CloudState) -> jax.Array:
@@ -53,7 +53,7 @@ def spreader_perf(spec, params, st: CloudState) -> jax.Array:
 
 def rates(spec, st: CloudState, perf: jax.Array):
     """One unified fair-share pass over the flat spreader space (§3.2)."""
-    thresh = 1e-6 * st.f_total + 1e-9
+    thresh = live_threshold(st.f_total)
     live = st.f_active & (st.t >= st.f_release) & (st.f_pr > thresh)
     rate_fn = SCHEDULERS[spec.scheduler]
     r = rate_fn(st.f_prov, st.f_cons, st.f_pl, live, perf,
@@ -67,25 +67,36 @@ def advance(ctx: StageCtx, st: CloudState):
     perf = spreader_perf(spec, params, st)
     r, live, thresh = rates(spec, st, perf)
 
-    # ---- event horizon --------------------------------------------------
-    ttc = jnp.where(live & (r > 0), st.f_pr / jnp.maximum(r, 1e-30), BIG)
-    gated = st.f_active & (st.t < st.f_release)
-    ttg = jnp.where(gated, st.f_release - st.t, BIG)
-    pending = st.task_state == TASK_PENDING
-    future = pending & (trace.arrival > st.t)
-    tta = jnp.where(future, trace.arrival - st.t, BIG)
+    # ---- event horizon: one fused masked-min reduction ------------------
+    # Seven candidate families — flow completion, latency-gate release,
+    # task arrival, PM power transition, allocation expiry, meter tick,
+    # t_stop — concatenated into one (F+F+T+P+V+2)-lane vector and reduced
+    # by a single masked min.  Min is order-insensitive for the values
+    # that can occur here (no NaNs; a ±0 tie is erased by the clamp
+    # below), so this is bit-identical to the per-family nested min.
     trans = (st.pstate == PM_SWITCHING_ON) | (st.pstate == PM_SWITCHING_OFF)
-    ttp = jnp.where(trans & jnp.isfinite(st.pstate_end),
-                    st.pstate_end - st.t, BIG)
-    alloc = st.vstage == mc.VM_ALLOCATED
-    tte = jnp.where(alloc & jnp.isfinite(st.vm_expiry),
-                    st.vm_expiry - st.t, BIG)
-    ttm = jnp.where(jnp.isfinite(st.meter_next), st.meter_next - st.t, BIG)
-    tts = jnp.where(jnp.isfinite(ctx.t_stop), ctx.t_stop - st.t, BIG)
-    dt = jnp.minimum(
-        jnp.minimum(jnp.minimum(jnp.min(ttc), jnp.min(tta)),
-                    jnp.minimum(jnp.min(ttp), jnp.min(tte))),
-        jnp.minimum(jnp.minimum(jnp.min(ttg), ttm), tts))
+    cand = jnp.concatenate([
+        st.f_pr / jnp.maximum(r, 1e-30),             # completion       [F]
+        st.f_release - st.t,                         # latency gate     [F]
+        trace.arrival - st.t,                        # task arrival     [T]
+        st.pstate_end - st.t,                        # PM transition    [P]
+        st.vm_expiry - st.t,                         # alloc expiry     [V]
+        jnp.stack([st.meter_next - st.t,             # meter tick, stop [2]
+                   ctx.t_stop - st.t]),
+    ])
+    mask = jnp.concatenate([
+        live & (r > 0),
+        st.f_active & (st.t < st.f_release),
+        (st.task_state == TASK_PENDING) & (trace.arrival > st.t),
+        trans & jnp.isfinite(st.pstate_end),
+        (st.vstage == mc.VM_ALLOCATED) & jnp.isfinite(st.vm_expiry),
+        jnp.stack([jnp.isfinite(st.meter_next), jnp.isfinite(ctx.t_stop)]),
+    ])
+    if spec.backend == "pallas":
+        from repro.kernels import ops as _kops
+        dt = _kops.masked_min_pallas(cand, mask)
+    else:
+        dt = jnp.min(jnp.where(mask, cand, BIG))
     has_event = dt < BIG
     dt = jnp.where(has_event, jnp.maximum(dt, 0.0), 0.0)
 
@@ -98,10 +109,19 @@ def advance(ctx: StageCtx, st: CloudState):
     # ---- drain flows ----------------------------------------------------
     f_pr = jnp.where(live, jnp.maximum(st.f_pr - r * dt, 0.0), st.f_pr)
     done = live & (f_pr <= thresh)
-    processed = st.processed + jax.ops.segment_sum(
-        jnp.where(live, r * dt, 0.0), st.f_prov, num_segments=lay.S)
+    # One 2-column scatter-add covers both provider-side reductions of the
+    # interval: delivered rate (observe's utilisation numerator) and
+    # processed work.  Columns scatter independently in identical segment
+    # order, so each is bit-identical to its standalone segment_sum.
+    prov_stats = jax.ops.segment_sum(
+        jnp.stack([jnp.where(live, r, 0.0), jnp.where(live, r * dt, 0.0)],
+                  axis=-1),
+        st.f_prov, num_segments=lay.S)
+    delivered = prov_stats[:, 0]
+    processed = st.processed + prov_stats[:, 1]
 
-    ctx = ctx._replace(r=r, live=live, thresh=thresh, done=done, dt=dt,
+    ctx = ctx._replace(r=r, live=live, thresh=thresh, done=done,
+                       delivered=delivered, dt=dt,
                        t0=st.t, t_new=t_new, has_event=has_event,
                        tick=tick, period=period)
     st = st._replace(t=t_new, t_c=t_c, n_events=st.n_events + 1,

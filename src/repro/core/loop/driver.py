@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from ..energy import PM_SWITCHING_OFF, PM_SWITCHING_ON
 from . import advance, lifecycle, observe, pm_sched, power, vm_sched
-from .state import TASK_PENDING, CloudState, StageCtx
+from .state import TASK_PENDING, CloudState, StageCtx, live_threshold
 
 STAGES = (
     advance.advance,        # §3.1/§3.2 sharing + clock-to-horizon + drain
@@ -41,7 +41,7 @@ def termination(ctx: StageCtx, st: CloudState, snap) -> CloudState:
     ts0, vs0, ps0, fa0 = snap
     trace = ctx.trace
     queued = (st.task_state == TASK_PENDING) & (trace.arrival <= st.t)
-    live2 = st.f_active & (st.f_pr > 1e-6 * st.f_total + 1e-9)
+    live2 = st.f_active & (st.f_pr > live_threshold(st.f_total))
     pend2 = (st.task_state == TASK_PENDING) & (trace.arrival > st.t)
     trans2 = (st.pstate == PM_SWITCHING_ON) | (st.pstate == PM_SWITCHING_OFF)
     more = live2.any() | pend2.any() | trans2.any() | queued.any()

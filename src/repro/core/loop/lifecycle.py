@@ -73,10 +73,16 @@ def vm_lifecycle(ctx: StageCtx, st: CloudState):
     v_cons = jnp.where(mig_done, lay.vm0 + vm_slot, v_cons)
     vstage = jnp.where(mig_done, mc.VM_RUNNING, vstage)
 
-    # task done -> destroy VM, release cores, complete task
+    # task done -> destroy VM, release cores, complete task.  Cores freed
+    # by completion and by allocation expiry (§3.4.2, applied below) share
+    # one 2-column scatter-add; the columns reduce independently, so each
+    # matches its standalone segment_sum bit-for-bit.
+    expired = (st.vstage == mc.VM_ALLOCATED) & (st.vm_expiry <= t_new)
     freed = jax.ops.segment_sum(
-        jnp.where(task_done, st.vm_cores, 0.0), host, num_segments=P)
-    free_cores = st.free_cores + freed
+        jnp.stack([jnp.where(task_done, st.vm_cores, 0.0),
+                   jnp.where(expired, st.vm_cores, 0.0)], axis=-1),
+        host, num_segments=P)
+    free_cores = st.free_cores + freed[:, 0]
     task_state = st.task_state
     t_done_arr = st.t_done
     tslot = jnp.where(task_done, st.vm_task, T)  # T = scatter drop
@@ -95,10 +101,7 @@ def vm_lifecycle(ctx: StageCtx, st: CloudState):
     f_active = st.f_active.at[:V].set(v_active)
 
     # allocation expiry (§3.4.2 self-defence)
-    expired = (st.vstage == mc.VM_ALLOCATED) & (st.vm_expiry <= t_new)
-    freed_a = jax.ops.segment_sum(
-        jnp.where(expired, st.vm_cores, 0.0), host, num_segments=P)
-    free_cores = free_cores + freed_a
+    free_cores = free_cores + freed[:, 1]
     vstage = jnp.where(expired, mc.VM_FREE, vstage)
 
     st = st._replace(

@@ -40,8 +40,9 @@ def build_view(ctx: StageCtx, st: CloudState) -> SimView:
     table = params.power
     r, live = ctx.r, ctx.live
 
-    delivered = jax.ops.segment_sum(jnp.where(live, r, 0.0), st.f_prov,
-                                    num_segments=lay.S)
+    # Per-provider delivered rate was already reduced by `advance`'s fused
+    # provider scatter-add — reuse it instead of a second segment_sum.
+    delivered = ctx.delivered
     cpu_del = delivered[lay.cpu0:lay.cpu0 + P]
     cpu_cap = jnp.maximum(params.pm_cores * params.perf_core, 1e-30)
     util = cpu_del / cpu_cap

@@ -25,6 +25,18 @@ from ..energy import MeterState
 
 BIG = jnp.float32(3.0e38)
 
+
+def live_threshold(f_total: jax.Array) -> jax.Array:
+    """The live-flow completion epsilon: a flow counts as drained once its
+    remaining work falls to ``1e-6 * registered_total + 1e-9``.
+
+    One definition shared by the ``advance`` stage's live mask and the
+    driver's termination verdict — the two must agree bit-for-bit or a
+    flow could progress forever without ever terminating the loop.
+    """
+    return 1e-6 * f_total + 1e-9
+
+
 # Consumption kinds: what a VM slot's single flow currently carries.
 KIND_MIGRATE = 5
 
@@ -55,13 +67,13 @@ class CloudState(NamedTuple):
     f_cons: jax.Array     # i32[V+P]
     f_active: jax.Array   # bool[V+P]
     f_release: jax.Array  # f32[V+P] latency gate
-    f_kind: jax.Array     # i32[V+P]
+    f_kind: jax.Array     # i8[V+P]
 
-    task_state: jax.Array  # i32[T]
+    task_state: jax.Array  # i8[T]
     task_vm: jax.Array     # i32[T]
     t_done: jax.Array      # f32[T]
 
-    vstage: jax.Array      # i32[V]
+    vstage: jax.Array      # i8[V]
     vm_task: jax.Array     # i32[V]
     vm_host: jax.Array     # i32[V]
     vm_cores: jax.Array    # f32[V]
@@ -69,7 +81,7 @@ class CloudState(NamedTuple):
     vm_saved_pr: jax.Array  # f32[V] remaining task work across suspend/migrate
     vm_mig_dst: jax.Array  # i32[V]
 
-    pstate: jax.Array      # i32[P]
+    pstate: jax.Array      # i8[P]
     pstate_end: jax.Array  # f32[P] (simple model transition deadline)
     free_cores: jax.Array  # f32[P]
 
@@ -115,6 +127,10 @@ class StageCtx(NamedTuple):
     live: jax.Array | None = None     # bool[F] flows that progressed
     thresh: jax.Array | None = None   # f32[F] completion epsilon
     done: jax.Array | None = None     # bool[F] flows that completed
+    delivered: jax.Array | None = None  # f32[S] per-provider rate this
+    #                                     interval (observe's utilisation
+    #                                     numerator — computed once in
+    #                                     advance's fused provider reduce)
     dt: jax.Array | None = None       # f32 the event horizon
     t0: jax.Array | None = None       # f32 interval start (pre-advance clock)
     t_new: jax.Array | None = None    # f32 interval end (== state clock after)

@@ -115,3 +115,120 @@ def fill_stats(provider, consumer, r, live, unfrozen, perf, *,
         interpret=interpret,
     )(prov2, cons2, rl2, uf2, perf2)
     return dp.reshape(-1)[:S], dc.reshape(-1)[:S]
+
+
+# ---------------------------------------------------------------------------
+# Fused full solve: the whole progressive-filling while-loop in one kernel
+# ---------------------------------------------------------------------------
+
+# VMEM guard for the resident problem (flows + one (LANES, S_pad) one-hot
+# tile + the (4, S_pad) stats row).  Above these bounds the engine's
+# round-wise fill_stats path takes over.
+MAX_SOLVE_S = 8192
+MAX_SOLVE_C = 32768
+
+
+def solve_fits(n_flows: int, n_spreaders: int) -> bool:
+    """True when the fused solve kernel's VMEM-resident problem fits."""
+    return n_flows <= MAX_SOLVE_C and n_spreaders <= MAX_SOLVE_S
+
+
+def _solve_kernel(prov_ref, cons_ref, pl_ref, live_ref, perf_ref, r_ref, *,
+                  c_rows: int, s_pad: int, max_iters: int, rel_eps: float):
+    prov = prov_ref[...]            # (c_rows, LANES) i32
+    cons = cons_ref[...]
+    p_l = pl_ref[...]               # (c_rows, LANES) f32
+    live = live_ref[...] > 0
+    perf = perf_ref[...]            # (1, s_pad) f32
+    s_ids = jax.lax.broadcasted_iota(jnp.int32, (1, s_pad), 1)
+
+    def one_hot(ids_row):
+        # (LANES, s_pad) one-hot of a LANES-row of spreader ids; a dot
+        # against it is an exact gather/scatter-sum (single 1 per row)
+        return (ids_row[:, None] == s_ids).astype(jnp.float32)
+
+    def round_body(_, carry):
+        def do(carry):
+            r, unfrozen = carry
+            rl = jnp.where(live, r, 0.0)
+            uf = unfrozen.astype(jnp.float32)
+            # pass 1: segmented stats via one MXU contraction per row
+            acc = jnp.zeros((4, s_pad), jnp.float32)
+            for row in range(c_rows):
+                eqp, eqc = one_hot(prov[row]), one_hot(cons[row])
+                rrow, urow = rl[row][None, :], uf[row][None, :]
+                acc = acc.at[0:1].add(jnp.dot(
+                    rrow, eqp, preferred_element_type=jnp.float32))
+                acc = acc.at[1:2].add(jnp.dot(
+                    rrow, eqc, preferred_element_type=jnp.float32))
+                acc = acc.at[2:3].add(jnp.dot(
+                    urow, eqp, preferred_element_type=jnp.float32))
+                acc = acc.at[3:4].add(jnp.dot(
+                    urow, eqc, preferred_element_type=jnp.float32))
+            avail_p = jnp.maximum(perf - acc[0:1], 0.0)
+            avail_c = jnp.maximum(perf - acc[1:2], 0.0)
+            dp = jnp.where(acc[2:3] > 0,
+                           avail_p / jnp.maximum(acc[2:3], 1.0), _BIG)
+            dc = jnp.where(acc[3:4] > 0,
+                           avail_c / jnp.maximum(acc[3:4], 1.0), _BIG)
+            # pass 2: per-flow headroom gather (one-hot matvec per row)
+            df = jnp.zeros_like(p_l)
+            for row in range(c_rows):
+                gp = jnp.dot(one_hot(prov[row]), dp.T,
+                             preferred_element_type=jnp.float32)
+                gc = jnp.dot(one_hot(cons[row]), dc.T,
+                             preferred_element_type=jnp.float32)
+                df = df.at[row].set(jnp.minimum(gp, gc)[:, 0])
+            df = jnp.minimum(df, jnp.maximum(p_l - r, 0.0))
+            df = jnp.where(unfrozen, df, _BIG)
+            delta = jnp.min(df)
+            delta = jnp.where(jnp.isfinite(delta) & (delta < _BIG),
+                              delta, 0.0)
+            r = jnp.where(unfrozen, r + delta, r)
+            tight = df <= delta * (1.0 + rel_eps) + 1e-12
+            return r, unfrozen & ~tight
+
+        # converged rounds are exact no-ops; skip their MXU work
+        return jax.lax.cond(carry[1].any(), do, lambda c: c, carry)
+
+    r0 = jnp.zeros_like(p_l)
+    r, _ = jax.lax.fori_loop(0, max_iters, round_body, (r0, live))
+    r_ref[...] = jnp.where(live, r, 0.0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("max_iters", "rel_eps", "interpret"))
+def maxmin_solve(provider, consumer, p_l, live, perf, *,
+                 max_iters: int = 64, rel_eps: float = 1e-5,
+                 interpret: bool = False):
+    """Max-min fair rates by progressive filling, solved in one kernel.
+
+    Same round recurrence as ``repro.core.fairshare.maxmin_rates`` /
+    :func:`repro.kernels.ref.maxmin_solve_ref`, but the carried rate and
+    freeze vectors stay VMEM-resident across rounds instead of round-
+    tripping through HBM per ``while_loop`` iteration.  Guard call sites
+    with :func:`solve_fits`.
+    """
+    C = provider.shape[0]
+    S = perf.shape[0]
+    C_pad = max(-(-C // LANES) * LANES, LANES)
+    S_pad = max(-(-S // LANES) * LANES, LANES)
+
+    def pad_c(x, fill, dtype):
+        return jnp.pad(x.astype(dtype), (0, C_pad - C),
+                       constant_values=fill).reshape(-1, LANES)
+
+    prov2 = pad_c(provider, S_pad - 1, jnp.int32)
+    cons2 = pad_c(consumer, S_pad - 1, jnp.int32)
+    pl2 = pad_c(p_l, 0.0, jnp.float32)
+    live2 = pad_c(live, 0.0, jnp.float32)   # padded flows are never live
+    perf2 = jnp.pad(perf.astype(jnp.float32),
+                    (0, S_pad - S)).reshape(1, S_pad)
+
+    r = pl.pallas_call(
+        functools.partial(_solve_kernel, c_rows=C_pad // LANES, s_pad=S_pad,
+                          max_iters=max_iters, rel_eps=rel_eps),
+        out_shape=jax.ShapeDtypeStruct((C_pad // LANES, LANES), jnp.float32),
+        interpret=interpret,
+    )(prov2, cons2, pl2, live2, perf2)
+    return r.reshape(-1)[:C]

@@ -36,6 +36,48 @@ def fill_stats_ref(provider, consumer, r, live, unfrozen, perf):
     return dp, dc
 
 
+def maxmin_solve_ref(provider, consumer, p_l, live, perf, *,
+                     max_iters: int = 64, rel_eps: float = 1e-5):
+    """Full progressive-filling solve (the engine's per-interval max-min
+    fair-share problem, paper §3.2.3) — ground truth for the fused
+    ``repro.kernels.maxmin.maxmin_solve`` kernel.
+
+    Identical round recurrence to ``repro.core.fairshare.maxmin_rates``
+    with the pure-jnp fill stats.
+    """
+    C = provider.shape[0]
+    r0 = jnp.zeros((C,), jnp.float32)
+
+    def body(state):
+        i, r, unfrozen = state
+        dp, dc = fill_stats_ref(provider, consumer, r, live, unfrozen, perf)
+        df = jnp.minimum(dp[provider], dc[consumer])
+        df = jnp.minimum(df, jnp.maximum(p_l - r, 0.0))
+        df = jnp.where(unfrozen, df, _BIG)
+        delta = jnp.min(df)
+        delta = jnp.where(jnp.isfinite(delta) & (delta < _BIG), delta, 0.0)
+        r = jnp.where(unfrozen, r + delta, r)
+        tight = df <= delta * (1.0 + rel_eps) + 1e-12
+        return i + 1, r, unfrozen & ~tight
+
+    def cond(state):
+        i, _r, unfrozen = state
+        return jnp.logical_and(i < max_iters, unfrozen.any())
+
+    _, r, _ = jax.lax.while_loop(cond, body, (jnp.int32(0), r0, live))
+    return jnp.where(live, r, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# event horizon: masked min over the candidate time-to-event vector
+# ---------------------------------------------------------------------------
+
+def masked_min_ref(cand: jax.Array, mask: jax.Array) -> jax.Array:
+    """Scalar ``min(cand[mask])`` with ``_BIG`` as the empty-set identity —
+    the engine's fused event-horizon reduction (loop/advance.py)."""
+    return jnp.min(jnp.where(mask, cand, _BIG))
+
+
 # ---------------------------------------------------------------------------
 # attention (used by the LM stack): GQA + causal/window/softcap/prefix-LM
 # ---------------------------------------------------------------------------

@@ -9,7 +9,8 @@ import pytest
 
 from repro.kernels import ref
 from repro.kernels.attention import flash_attention
-from repro.kernels.maxmin import fill_stats
+from repro.kernels.horizon import masked_min
+from repro.kernels.maxmin import fill_stats, maxmin_solve
 from repro.kernels.ssm import linear_scan
 from repro.models.attention import chunked_attention, naive_attention
 
@@ -47,6 +48,82 @@ def test_fill_stats_degenerate_empty():
                                         perf)
     np.testing.assert_allclose(np.asarray(dp), np.asarray(dp_ref))
     np.testing.assert_allclose(np.asarray(dc), np.asarray(dc_ref))
+
+
+# ---------------------------------------------------------------------------
+# fused maxmin full solve
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("C,S,seed", [(8, 4, 0), (64, 16, 1), (300, 40, 2),
+                                      (1024, 130, 3)])
+def test_maxmin_solve_matches_ref(C, S, seed):
+    rng = np.random.RandomState(seed)
+    provider = jnp.asarray(rng.randint(0, S, C), jnp.int32)
+    consumer = jnp.asarray(rng.randint(0, S, C), jnp.int32)
+    p_l = jnp.asarray((rng.rand(C) * 4 + 0.1).astype(np.float32))
+    live = jnp.asarray(rng.rand(C) < 0.8)
+    perf = jnp.asarray((rng.rand(S) * 10).astype(np.float32))
+    want = ref.maxmin_solve_ref(provider, consumer, p_l, live, perf)
+    got = maxmin_solve(provider, consumer, p_l, live, perf, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_maxmin_solve_degenerate_empty():
+    C, S = 16, 8
+    z = jnp.zeros((C,), jnp.int32)
+    none = jnp.zeros((C,), bool)
+    got = maxmin_solve(z, z, jnp.ones((C,), jnp.float32), none,
+                       jnp.ones((S,), jnp.float32), interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.zeros((C,), np.float32))
+
+
+def test_maxmin_solve_matches_engine_scheduler():
+    """The fused solve must agree with the engine's jnp maxmin_rates (the
+    golden path) — same freeze recurrence, same rel_eps semantics."""
+    from repro.core.fairshare import maxmin_rates
+    rng = np.random.RandomState(7)
+    C, S = 200, 30
+    provider = jnp.asarray(rng.randint(0, S, C), jnp.int32)
+    consumer = jnp.asarray(rng.randint(S // 2, S, C), jnp.int32)
+    p_l = jnp.asarray((rng.rand(C) * 3 + 0.05).astype(np.float32))
+    live = jnp.asarray(rng.rand(C) < 0.9)
+    perf = jnp.asarray((rng.rand(S) * 8).astype(np.float32))
+    want = maxmin_rates(provider, consumer, p_l, live, perf, backend="jnp")
+    got = maxmin_solve(provider, consumer, p_l, live, perf, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# event-horizon masked min
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("N,seed", [(1, 0), (7, 1), (128, 2), (1025, 3),
+                                    (5000, 4)])
+def test_masked_min_matches_ref(N, seed):
+    rng = np.random.RandomState(seed)
+    cand = jnp.asarray((rng.randn(N) * 100).astype(np.float32))
+    mask = jnp.asarray(rng.rand(N) < 0.6)
+    want = ref.masked_min_ref(cand, mask)
+    got = masked_min(cand, mask, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_masked_min_empty_mask_is_big():
+    cand = jnp.arange(10, dtype=jnp.float32)
+    mask = jnp.zeros((10,), bool)
+    got = masked_min(cand, mask, interpret=True)
+    assert float(got) == float(ref.masked_min_ref(cand, mask))
+    assert float(got) == float(np.float32(3.0e38))
+
+
+def test_masked_min_infinite_unmasked_lanes():
+    """Unmasked +inf lanes (disabled meter / t_stop) must not leak."""
+    cand = jnp.asarray([np.inf, 3.5, np.inf, 2.0], jnp.float32)
+    mask = jnp.asarray([False, True, False, True])
+    got = masked_min(cand, mask, interpret=True)
+    assert float(got) == 2.0
 
 
 # ---------------------------------------------------------------------------

@@ -96,7 +96,9 @@ def test_eq6_reconstruction_holds_during_migration_window():
     st = eng.start_migration(spec, params, res1.state, 0, 1)
     vm_at_suspend = float(res1.meters.vm.energy[0])
     for t_probe in (12.0, 16.0, 20.0):  # transfer spans [10, 20.24]
-        res = eng.simulate(spec, tr, params=params, state=st, t_stop=t_probe)
+        # simulate() donates its state argument — each probe gets a copy
+        res = eng.simulate(spec, tr, params=params,
+                           state=jax.tree.map(jnp.copy, st), t_stop=t_probe)
         rd = res.readings(spec)
         assert np.asarray(res.state.vstage)[0] == mc.VM_MIGRATING
         np.testing.assert_allclose(float(rd["vm"][0]), vm_at_suspend,
