@@ -26,8 +26,8 @@ def main(argv=None) -> int:
 
     from benchmarks import (consolidation_bench, energy_overhead,
                             ensemble_bench, pareto_bench, roofline, scaling,
-                            sched_bench, sharing_perf, sweep_bench,
-                            traces_bench, validation)
+                            sched_bench, sharing_perf, streaming_bench,
+                            sweep_bench, traces_bench, validation)
     modules = {
         "validation": validation,        # Fig 7/8/9/10
         "sharing_perf": sharing_perf,    # Fig 12 / Table 3
@@ -40,6 +40,7 @@ def main(argv=None) -> int:
         "pareto": pareto_bench,          # Pareto-front experiment (sharded)
         "ensemble": ensemble_bench,      # trace-ensemble experiment (sharded)
         "consolidation": consolidation_bench,  # in-loop migration policy
+        "streaming": streaming_bench,    # windowed datacenter-year replay
     }
     if args.only:
         keep = set(args.only.split(","))
@@ -60,7 +61,7 @@ def main(argv=None) -> int:
         wall = time.time() - t0
         (outdir / f"{name}.json").write_text(json.dumps(rows, indent=1))
         if (name in ("sweep", "scaling", "pareto", "ensemble",
-                     "consolidation") and status == "ok"):
+                     "consolidation", "streaming") and status == "ok"):
             # stable perf-trajectory artifacts: events/sec of the batched
             # sweep, the sharded experiment kinds and the consolidation
             # tournament (only on success — never clobber the trajectory

@@ -1,0 +1,122 @@
+"""Streaming-window replay throughput — the datacenter-year scalability
+claim (DESIGN.md §8).
+
+Replays GWA-like traces of three different total lengths through
+``engine.simulate_stream`` with one fixed window shape, asserting that the
+*entire* sweep compiles the window step exactly once (the compile key is
+``(spec, W, Q)``, never the total trace length) and reporting simulated
+events/second of wall time per length.  ``--full`` replays >= 100k tasks;
+the driver snapshots this as ``BENCH_streaming.json`` so successive PRs
+can track whether streaming throughput regresses against the monolithic
+sweep (``BENCH_sweep.json``)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import compile_cache, engine
+from repro.data.pipeline import gwa_window_stream
+
+WINDOW = 512
+N_PM, N_VM, PM_CORES = 20, 1024, 64.0
+
+
+def _replay(spec, params, n_tasks: int) -> dict:
+    stream = gwa_window_stream("das2", n_tasks, WINDOW,
+                               max_cores=int(PM_CORES), seed=21)
+    t0 = time.time()
+    res = engine.simulate_stream(spec, stream, params)
+    jax.block_until_ready(res.t_end)
+    wall = time.time() - t0
+    events = int(res.n_events)
+    return {
+        "tasks": n_tasks,
+        "windows": -(-n_tasks // WINDOW),
+        "wall_s": round(wall, 4),
+        "events": events,
+        "events_per_s": round(events / wall, 1),
+        "tasks_per_s": round(n_tasks / wall, 1),
+        "done": int(np.isfinite(np.asarray(res.completion)).sum()),
+        "rejected": int(np.asarray(res.rejected).sum()),
+        "overflow": bool(res.overflow),
+        "sim_t_end": round(float(res.t_end), 1),
+        "energy_mj": round(float(np.asarray(res.energy).sum()) / 1e6, 3),
+    }
+
+
+def run(quick=True) -> list[dict]:
+    # three total lengths through ONE window shape: the second and third
+    # replay must add zero compiles
+    lengths = [2_000, 4_000, 8_000] if quick else [25_000, 50_000, 100_000]
+    spec, params = engine.make_cloud(n_pm=N_PM, n_vm=N_VM, pm_cores=PM_CORES,
+                                     max_events=200_000_000)
+
+    engine._stream_step.clear_cache()
+    rows = []
+    for i, n in enumerate(lengths):
+        row = _replay(spec, params, n)
+        row["name"] = f"stream_{n}"
+        row["window"] = WINDOW
+        row["compiles_so_far"] = int(engine._stream_step._cache_size())
+        if i == 0:
+            row["xla_cache_dir"] = compile_cache.active_dir()
+        rows.append(row)
+
+    compiles = int(engine._stream_step._cache_size())
+    if compiles != 1:
+        raise AssertionError(
+            f"streaming window step compiled {compiles} times across "
+            f"{len(lengths)} trace lengths; the compile key must be "
+            f"(spec, W, Q) only")
+
+    # 8-lane batched streaming replay — sweep_bench's parameter grid over
+    # the windowed engine, so BENCH_streaming's events/s is comparable
+    # with BENCH_sweep's sweep8_batched row (same lane count, same
+    # numerator convention: events summed across lanes)
+    import dataclasses
+
+    from repro.experiments.shard import simulate_stream_batch
+    points = [
+        dataclasses.replace(params,
+                            net_bw=float(60.0 + 30.0 * (i % 4)),
+                            boot_work=float(5.0 + 10.0 * (i // 4)))
+        for i in range(8)
+    ]
+    batch = engine.stack_params(points)
+    n_batch = lengths[0]
+
+    def batch_stream():
+        return gwa_window_stream("das2", n_batch, WINDOW,
+                                 max_cores=int(PM_CORES), seed=21)
+
+    res = simulate_stream_batch(spec, batch_stream(), batch)  # compile
+    jax.block_until_ready(res.t_end)
+    t0 = time.time()
+    res = simulate_stream_batch(spec, batch_stream(), batch)
+    jax.block_until_ready(res.t_end)
+    wall = time.time() - t0
+    events = int(np.asarray(res.n_events).sum())
+    rows.append({
+        "name": "stream_sweep8_batched",
+        "points": 8,
+        "tasks": n_batch,
+        "window": WINDOW,
+        "wall_s": round(wall, 4),
+        "events": events,
+        "events_per_s": round(events / wall, 1),
+        "per_point_events": [int(x) for x in np.asarray(res.n_events)],
+    })
+
+    rows.append({
+        "name": "stream_compile_count",
+        "trace_lengths": lengths,
+        "compiles": compiles,
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(quick=True), indent=1))

@@ -93,6 +93,8 @@ __all__ = [
     "make_cloud", "stack_params", "stack_traces", "init_state", "simulate",
     "simulate_batch", "simulate_batch_sharded", "start_migration",
     "make_allocation", "VM_SCHEDULERS", "PM_SCHEDULERS",
+    "StreamCarry", "StreamResult", "simulate_stream", "init_stream",
+    "default_n_slots",
 ]
 
 
@@ -249,11 +251,19 @@ def stack_params(params: Sequence[CloudParams]) -> CloudParams:
 
 
 class Trace(NamedTuple):
-    """Task trace: one VM request per task (paper §4.2.2 protocol)."""
+    """Task trace: one VM request per task (paper §4.2.2 protocol).
+
+    ``gid`` is the streaming engine's *global task id* (DESIGN.md §8):
+    ``None`` for a monolithic trace (the task axis IS the id), an
+    ``i32[T]`` array for a slot-table window where recycled slots hold
+    arbitrary ids and ``-1`` marks a free/padded slot.  ``None`` is not a
+    pytree leaf, so monolithic traces batch/vmap exactly as before.
+    """
 
     arrival: jax.Array  # f32[T] submission times (sorted not required)
     cores: jax.Array    # f32[T]
     work: jax.Array     # f32[T] total processing units (= runtime*cores*perf)
+    gid: jax.Array | None = None  # i32[T] global ids (streaming); -1 = free
 
     @property
     def n(self) -> int:
@@ -263,6 +273,21 @@ class Trace(NamedTuple):
 def stack_traces(traces: Sequence[Trace]) -> Trace:
     """Stack equal-length traces along a new leading batch axis
     (DESIGN.md §4)."""
+    traces = list(traces)
+    if not traces:
+        raise ValueError("stack_traces needs at least one trace")
+    lengths = [t.n for t in traces]
+    if len(set(lengths)) > 1:
+        raise ValueError(
+            f"stack_traces needs equal-length traces (one static task axis "
+            f"per compile), got lengths {lengths}; pad the traces to one "
+            f"length, or chunk them with repro.core.trace.chunk_trace and "
+            f"replay via simulate_stream instead")
+    with_gid = [t.gid is not None for t in traces]
+    if any(with_gid) and not all(with_gid):
+        raise ValueError(
+            "stack_traces cannot mix gid-carrying (streaming) and "
+            "monolithic traces: set gid on all windows or on none")
     return jax.tree.map(lambda *xs: jnp.stack(xs), *traces)
 
 
@@ -450,6 +475,312 @@ def simulate_batch_sharded(spec: CloudSpec, trace: Trace,
     """
     from repro.experiments.shard import simulate_batch_sharded as impl
     return impl(spec, trace, params, t_stop, devices)
+
+
+# ---------------------------------------------------------------------------
+# Streaming trace windows (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+class StreamCarry(NamedTuple):
+    """The per-window carry of :func:`simulate_stream` (DESIGN.md §8).
+
+    ``state`` is the ordinary :class:`CloudState` whose task axis is the
+    fixed slot pool (``Q`` slots, never the total trace length); ``slots``
+    is the slot-table :class:`Trace` those task indices resolve against —
+    a free slot has ``gid == -1``, ``arrival == inf``, ``task_state ==
+    TASK_DONE``, which makes it inert in every queue/horizon/termination
+    mask.  Both halves are donated to each window step.
+    """
+
+    state: CloudState
+    slots: Trace
+
+
+class StreamResult(NamedTuple):
+    """:class:`CloudResult`-shaped result of a windowed replay: per-task
+    outputs are re-assembled over the *global* task axis (``T_total``),
+    meters/state are the final carried values — field-for-field comparable
+    with the monolithic result, plus per-window progress curves."""
+
+    state: CloudState
+    completion: jax.Array   # f32[T_total] completion times (inf: unfinished)
+    rejected: jax.Array     # bool[T_total]
+    energy: jax.Array       # f32[P] — view of meters.pm (as CloudResult)
+    energy_sampled: jax.Array  # f32[P]
+    meters: MeterState
+    n_events: jax.Array
+    t_end: jax.Array
+    overflow: jax.Array
+    window_t_end: jax.Array   # f32[n_windows] clock after each window
+    window_energy: jax.Array  # f32[n_windows] total PM energy after each
+
+    def readings(self, spec: "CloudSpec") -> dict[str, jax.Array]:
+        """Named energy readings of the stack — same API as
+        :meth:`CloudResult.readings`."""
+        return meter_readings(spec.meters, self.meters)
+
+
+def default_n_slots(spec: CloudSpec, window: int) -> int:
+    """Default slot-pool size: room for a full window of fresh arrivals on
+    top of every VM the cloud can run simultaneously (plus queue slack) —
+    overflow is reported, never silent, so tight pools fail loudly."""
+    return max(2 * window, spec.n_vm + window)
+
+
+def init_stream(spec: CloudSpec, n_slots: int,
+                params: CloudParams | None = None) -> StreamCarry:
+    """The streaming engine's initial carry: an empty slot table and a
+    :func:`init_state` whose every task slot is free (inert ``TASK_DONE``,
+    ``arrival == inf``)."""
+    Q = int(n_slots)
+    slots = Trace(
+        arrival=jnp.full((Q,), jnp.inf, jnp.float32),
+        cores=jnp.zeros((Q,), jnp.float32),
+        work=jnp.zeros((Q,), jnp.float32),
+        gid=jnp.full((Q,), -1, jnp.int32),
+    )
+    st = init_state(spec, slots, params)
+    st = st._replace(task_state=jnp.full((Q,), TASK_DONE, jnp.int8))
+    # init_state shares its zero buffers across fields; the window step
+    # *donates* the carry, and donating one buffer twice is an XLA error —
+    # copy leaf-wise so every donated leaf owns its storage.
+    return jax.tree.map(jnp.copy, StreamCarry(state=st, slots=slots))
+
+
+def _stream_step_impl(spec: CloudSpec, carry: StreamCarry, window: Trace,
+                      params: CloudParams, t_prev_next: jax.Array,
+                      t_next: jax.Array, t_stop: jax.Array):
+    """One window of the streaming engine (DESIGN.md §8).
+
+    1. *Insert*: the window's valid tasks (``gid >= 0``) scatter into free
+       slots in rank order (i-th incoming task -> i-th free slot); pool
+       exhaustion raises ``overflow``, never drops silently.
+    2. *Replay*: the previous window's loop ended on the hand-over
+       iteration with its management delta discarded (the monolithic
+       engine ran that pass with the next arrival already queued) — replay
+       it now that the arrivals are present.  ``t_prev_next`` tells whether
+       the previous loop ended on a hand-over (``t >= t_prev_next``) or on
+       ``t_stop``/exhaustion (no discarded pass -> no replay).  A
+       same-instant cohort split across the window boundary
+       (``t >= t_next``) defers the pass — and the whole loop — again.
+    3. *Loop*: the ordinary staged pipeline with the ``t_next`` sentinel
+       joining the horizon/termination masks; it runs exactly the
+       monolithic iteration sequence up to the next hand-over.
+    4. *Flush*: terminal slots emit ``(gid, t_done, rejected)`` and are
+       freed for the next window.
+    """
+    st, slots = carry.state, carry.slots
+    Q = slots.n
+
+    # ---- 1. insert: rank-matched scatter of valid tasks into free slots
+    free = slots.gid < 0
+    valid = window.gid >= 0
+    free_rank = jnp.cumsum(free) - 1          # each free slot's rank
+    slot_of_rank = jnp.full((Q,), Q, jnp.int32).at[
+        jnp.where(free, free_rank, Q)].set(
+        jnp.arange(Q, dtype=jnp.int32), mode="drop")
+    pos = jnp.cumsum(valid) - 1               # each incoming task's rank
+    take = valid & (pos < jnp.sum(free))
+    dest = jnp.where(take, slot_of_rank[jnp.clip(pos, 0, Q - 1)], Q)
+    slots = Trace(
+        arrival=slots.arrival.at[dest].set(window.arrival, mode="drop"),
+        cores=slots.cores.at[dest].set(window.cores, mode="drop"),
+        work=slots.work.at[dest].set(window.work, mode="drop"),
+        gid=slots.gid.at[dest].set(window.gid, mode="drop"),
+    )
+    st = st._replace(
+        task_state=st.task_state.at[dest].set(TASK_PENDING, mode="drop"),
+        task_vm=st.task_vm.at[dest].set(-1, mode="drop"),
+        t_done=st.t_done.at[dest].set(jnp.inf, mode="drop"),
+        overflow=st.overflow | jnp.any(valid & ~take),
+    )
+
+    # ---- 2. gated management replay
+    replay = jnp.isfinite(t_prev_next) & (st.t >= t_prev_next)
+    split = jnp.isfinite(t_next) & (st.t >= t_next)
+    stopped = jnp.isfinite(t_stop) & (st.t >= t_stop)
+    do_mp = replay & ~split
+    st_mp = loop.management_pass(spec, params, slots, st)
+    st = jax.tree.map(lambda a, b: jnp.where(do_mp, a, b), st_mp, st)
+    st = st._replace(running=do_mp & ~stopped)
+
+    # ---- 3. the staged loop up to the next hand-over
+    def cond(s: CloudState):
+        return s.running & (s.n_events < spec.max_events)
+
+    st = jax.lax.while_loop(
+        cond, loop.make_body(spec, params, slots, t_stop, t_next), st)
+
+    # ---- 4. flush terminal slots (compacted to the front), free them
+    term = ((st.task_state == TASK_DONE) | (st.task_state == TASK_REJECTED)
+            ) & (slots.gid >= 0)
+    out_idx = jnp.where(term, jnp.cumsum(term) - 1, Q)
+    out = {
+        "gid": jnp.full((Q,), -1, jnp.int32).at[out_idx].set(
+            slots.gid, mode="drop"),
+        "t_done": jnp.full((Q,), jnp.inf, jnp.float32).at[out_idx].set(
+            st.t_done, mode="drop"),
+        "rejected": jnp.zeros((Q,), bool).at[out_idx].set(
+            st.task_state == TASK_REJECTED, mode="drop"),
+        "t_end": st.t,
+        "energy": jnp.sum(st.meters.pm.energy),
+    }
+    slots = Trace(
+        arrival=jnp.where(term, jnp.inf, slots.arrival),
+        cores=jnp.where(term, 0.0, slots.cores),
+        work=jnp.where(term, 0.0, slots.work),
+        gid=jnp.where(term, -1, slots.gid),
+    )
+    st = st._replace(
+        task_state=jnp.where(term, TASK_DONE, st.task_state),
+        task_vm=jnp.where(term, -1, st.task_vm),
+        t_done=jnp.where(term, jnp.inf, st.t_done),
+    )
+    return StreamCarry(state=st, slots=slots), out
+
+
+@functools.partial(jax.jit, static_argnames=("spec",),
+                   donate_argnames=("carry",))
+def _stream_step(spec: CloudSpec, carry: StreamCarry, window: Trace,
+                 params: CloudParams, t_prev_next: jax.Array,
+                 t_next: jax.Array, t_stop: jax.Array):
+    """The one compiled program of a streaming replay: its compile key is
+    ``(spec, W, Q)`` — never the total trace length — so a datacenter-year
+    trace re-traces nothing after the first window."""
+    return _stream_step_impl(spec, carry, window, params,
+                             t_prev_next, t_next, t_stop)
+
+
+def _as_window_iter(windows, window_size=None):
+    """Normalize ``windows`` into ``(iterator of gid-carrying Traces, W)``.
+
+    Accepts a ``repro.core.trace.WindowedTrace``, a sequence, or a
+    generator of :class:`Trace` windows (each either gid-carrying — e.g.
+    ``WindowedTrace.window(k)`` — or plain, in which case sequential
+    global ids are assigned in arrival order).  Windows must be
+    time-sorted globally; ``chunk_trace`` guarantees that, generators
+    promise it (DESIGN.md §8).
+    """
+    if hasattr(windows, "n_windows") and hasattr(windows, "window"):
+        seq = (windows.window(k) for k in range(windows.n_windows))
+        return seq, int(windows.window_size)
+
+    def gen():
+        offset = 0
+        W = window_size
+        for w in windows:
+            if w.gid is None:
+                w = w._replace(gid=jnp.arange(offset, offset + w.n,
+                                              dtype=jnp.int32))
+                offset += w.n
+            if W is not None and w.n != W:
+                if w.n > W:
+                    raise ValueError(
+                        f"window of {w.n} tasks exceeds the stream's "
+                        f"window size {W}; all windows must share one "
+                        f"shape (pad the last window, as chunk_trace does)")
+                pad = W - w.n
+                w = Trace(
+                    arrival=jnp.concatenate(
+                        [w.arrival, jnp.full((pad,), jnp.inf, jnp.float32)]),
+                    cores=jnp.concatenate(
+                        [w.cores, jnp.zeros((pad,), jnp.float32)]),
+                    work=jnp.concatenate(
+                        [w.work, jnp.zeros((pad,), jnp.float32)]),
+                    gid=jnp.concatenate(
+                        [w.gid, jnp.full((pad,), -1, jnp.int32)]),
+                )
+            yield w
+
+    return gen(), window_size
+
+
+def _first_arrival(w: Trace) -> jax.Array:
+    """The window's first valid arrival — the ``t_next`` sentinel value.
+    Windows are time-sorted, so this is exactly the min the monolithic
+    horizon takes over every not-yet-loaded arrival."""
+    return jnp.min(jnp.where(w.gid >= 0, w.arrival,
+                             jnp.float32(jnp.inf))).astype(jnp.float32)
+
+
+def simulate_stream(spec: CloudSpec, windows,
+                    params: CloudParams | None = None, *,
+                    n_slots: int | None = None,
+                    t_stop: float | jax.Array = jnp.inf) -> StreamResult:
+    """Replay a windowed trace through one compiled window step
+    (DESIGN.md §8) — bit-identical to the monolithic :func:`simulate` on
+    the concatenated trace, but compiled once per ``(spec, W, Q)`` instead
+    of once per total length.
+
+    ``windows`` is a :class:`repro.core.trace.WindowedTrace` (from
+    ``chunk_trace``), or any sequence/generator of time-sorted
+    :class:`Trace` windows (e.g.
+    :func:`repro.data.pipeline.gwa_window_stream` — the full trace is
+    never materialised).  ``n_slots`` bounds the
+    simultaneously-live task population (default
+    :func:`default_n_slots`); exhaustion sets ``overflow``.
+    """
+    if params is None:
+        params = CloudParams.for_spec(spec)
+    _check_meter_params(spec, params)
+    it, W = _as_window_iter(windows)
+    cur = next(iter(it), None) if W is None else next(it, None)
+    if cur is None:
+        raise ValueError("simulate_stream needs at least one window")
+    if W is None:  # generator input: first window fixes the shape
+        it, _ = _as_window_iter(_chain_one(cur, it), window_size=cur.n)
+        cur = next(it)
+    Q = default_n_slots(spec, cur.n) if n_slots is None else int(n_slots)
+    carry = init_stream(spec, Q, params)
+    t_stop = jnp.asarray(t_stop, jnp.float32)
+    # t_prev_next = 0 makes the first step run the monolithic pre-loop
+    # management pass (the clock starts at 0 >= 0).
+    t_prev_next = jnp.float32(0.0)
+    outs = []
+    while cur is not None:
+        nxt = next(it, None)
+        t_next = (jnp.float32(jnp.inf) if nxt is None
+                  else _first_arrival(nxt))
+        carry, ys = _stream_step(spec, carry, cur, params,
+                                 t_prev_next, t_next, t_stop)
+        outs.append(ys)
+        t_prev_next, cur = t_next, nxt
+    return _assemble_stream(spec, carry, outs)
+
+
+def _chain_one(first, rest):
+    yield first
+    yield from rest
+
+
+def _assemble_stream(spec: CloudSpec, carry: StreamCarry,
+                     outs: list[dict]) -> StreamResult:
+    """Scatter the per-window flushes back onto the global task axis."""
+    gids = jnp.concatenate([o["gid"] for o in outs])
+    t_done = jnp.concatenate([o["t_done"] for o in outs])
+    rej = jnp.concatenate([o["rejected"] for o in outs])
+    # unfinished tasks (still live in the carry at stream end) count too
+    live_gid = jnp.where(carry.slots.gid >= 0, carry.slots.gid, -1)
+    n_total = int(jnp.maximum(jnp.max(gids, initial=-1),
+                              jnp.max(live_gid, initial=-1))) + 1
+    idx = jnp.where(gids >= 0, gids, n_total)
+    completion = jnp.full((n_total,), jnp.inf, jnp.float32).at[idx].set(
+        t_done, mode="drop")
+    rejected = jnp.zeros((n_total,), bool).at[idx].set(rej, mode="drop")
+    st = carry.state
+    return StreamResult(
+        state=st,
+        completion=completion,
+        rejected=rejected,
+        energy=st.meters.pm.energy,
+        energy_sampled=st.meters.pm_sampled,
+        meters=st.meters,
+        n_events=st.n_events,
+        t_end=st.t,
+        overflow=st.overflow,
+        window_t_end=jnp.stack([o["t_end"] for o in outs]),
+        window_energy=jnp.stack([o["energy"] for o in outs]),
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("spec",))

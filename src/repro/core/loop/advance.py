@@ -75,14 +75,26 @@ def advance(ctx: StageCtx, st: CloudState):
     # that can occur here (no NaNs; a ±0 tie is erased by the clamp
     # below), so this is bit-identical to the per-family nested min.
     trans = (st.pstate == PM_SWITCHING_ON) | (st.pstate == PM_SWITCHING_OFF)
+    # Streaming windows (DESIGN.md §8) add one more candidate: the first
+    # arrival of the next, not-yet-loaded trace window.  Arrivals are
+    # window-sorted, so this single sentinel is exactly the min the
+    # monolithic engine would take over every future task's arrival — the
+    # value (``t_next - t``) and mask (``pending future arrival``) match
+    # the monolithic arrival lanes bit-for-bit.  ``ctx.t_next is None``
+    # (monolithic run) keeps the candidate vector untouched.
+    tail_cand = [st.meter_next - st.t, ctx.t_stop - st.t]
+    tail_mask = [jnp.isfinite(st.meter_next), jnp.isfinite(ctx.t_stop)]
+    if ctx.t_next is not None:
+        tail_cand.append(ctx.t_next - st.t)
+        tail_mask.append(jnp.isfinite(ctx.t_next) & (ctx.t_next > st.t))
     cand = jnp.concatenate([
         st.f_pr / jnp.maximum(r, 1e-30),             # completion       [F]
         st.f_release - st.t,                         # latency gate     [F]
         trace.arrival - st.t,                        # task arrival     [T]
         st.pstate_end - st.t,                        # PM transition    [P]
         st.vm_expiry - st.t,                         # alloc expiry     [V]
-        jnp.stack([st.meter_next - st.t,             # meter tick, stop [2]
-                   ctx.t_stop - st.t]),
+        jnp.stack(tail_cand),                        # meter tick, stop
+        #                                              (+ window sentinel)
     ])
     mask = jnp.concatenate([
         live & (r > 0),
@@ -90,7 +102,7 @@ def advance(ctx: StageCtx, st: CloudState):
         (st.task_state == TASK_PENDING) & (trace.arrival > st.t),
         trans & jnp.isfinite(st.pstate_end),
         (st.vstage == mc.VM_ALLOCATED) & jnp.isfinite(st.vm_expiry),
-        jnp.stack([jnp.isfinite(st.meter_next), jnp.isfinite(ctx.t_stop)]),
+        jnp.stack(tail_mask),
     ])
     if spec.backend == "pallas":
         from repro.kernels import ops as _kops

@@ -13,6 +13,7 @@ stage modules; scheduling policies are added by registering them with
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from ..energy import PM_SWITCHING_OFF, PM_SWITCHING_ON
@@ -27,6 +28,15 @@ STAGES = (
     pm_sched.pm_sched,      # §3.5.1 PM policy hook (registry dispatch)
     vm_sched.vm_sched,      # §3.5.1 VM policy hook (registry dispatch)
 )
+
+# The management suffix of the pipeline (policy hooks).  Streaming windows
+# gate exactly these two stages off on the hand-over iteration (the one
+# whose horizon lands the clock on the next window's first arrival): the
+# monolithic engine runs them *with* that arrival already queued, so the
+# streaming step defers them to the next window's management pass, where
+# the arrival is present — same stage inputs, bit-identical outputs
+# (DESIGN.md §8).
+N_MANAGEMENT_STAGES = 2
 
 
 def termination(ctx: StageCtx, st: CloudState, snap) -> CloudState:
@@ -46,19 +56,45 @@ def termination(ctx: StageCtx, st: CloudState, snap) -> CloudState:
     trans2 = (st.pstate == PM_SWITCHING_ON) | (st.pstate == PM_SWITCHING_OFF)
     more = live2.any() | pend2.any() | trans2.any() | queued.any()
     hit_stop = jnp.isfinite(ctx.t_stop) & (st.t >= ctx.t_stop)
+    if ctx.t_next is not None:
+        # Streaming window (DESIGN.md §8): tasks beyond this window are
+        # work that remains (the monolithic pend2 would see them), and
+        # reaching the next window's first arrival ends this window's
+        # loop — the next step resumes from the identical carried state.
+        more = more | (jnp.isfinite(ctx.t_next) & (ctx.t_next > st.t))
+        hit_stop = hit_stop | (jnp.isfinite(ctx.t_next)
+                               & (st.t >= ctx.t_next))
     changed = (jnp.any(st.task_state != ts0) | jnp.any(st.vstage != vs0)
                | jnp.any(st.pstate != ps0) | jnp.any(st.f_active != fa0))
     return st._replace(running=(ctx.has_event | changed) & more & ~hit_stop)
 
 
-def make_body(spec, params, trace, t_stop):
-    """The ``lax.while_loop`` body: one pipeline pass over the stages."""
+def make_body(spec, params, trace, t_stop, t_next=None):
+    """The ``lax.while_loop`` body: one pipeline pass over the stages.
+
+    ``t_next`` (streaming windows only, DESIGN.md §8) is the first arrival
+    of the next trace window; ``None`` — the monolithic engine — composes
+    exactly the pre-streaming body.
+    """
 
     def body(st: CloudState) -> CloudState:
-        ctx = StageCtx(spec=spec, params=params, trace=trace, t_stop=t_stop)
+        ctx = StageCtx(spec=spec, params=params, trace=trace, t_stop=t_stop,
+                       t_next=t_next)
         snap = (st.task_state, st.vstage, st.pstate, st.f_active)
-        for stage in STAGES:
+        for stage in STAGES[:-N_MANAGEMENT_STAGES]:
             ctx, st = stage(ctx, st)
+        st_pre = st
+        for stage in STAGES[-N_MANAGEMENT_STAGES:]:
+            ctx, st = stage(ctx, st)
+        if t_next is not None:
+            # Hand-over iteration: the clock reached the next window's
+            # first arrival, so the management stages ran without that
+            # (still unloaded) task queued.  Discard their delta — the
+            # next window's step replays the identical pass with the
+            # arrival present, matching the monolithic stage sequence.
+            defer = jnp.isfinite(t_next) & (st_pre.t >= t_next)
+            st = jax.tree.map(
+                lambda pre, post: jnp.where(defer, pre, post), st_pre, st)
         return termination(ctx, st, snap)
 
     return body

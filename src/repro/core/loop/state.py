@@ -121,6 +121,15 @@ class StageCtx(NamedTuple):
     params: Any                  # CloudParams pytree
     trace: Any                   # Trace
     t_stop: jax.Array            # f32 scalar
+    # Streaming-window sentinel (DESIGN.md §8): the first arrival of the
+    # *next* trace window, or ``None`` for a monolithic run.  When set it
+    # (a) joins the event-horizon candidates so the loop advances exactly
+    # to the next unseen arrival, (b) keeps the termination guard's
+    # "work remains" verdict true while future windows exist, and (c)
+    # gates the management stages off on the hand-over iteration — their
+    # pass is replayed by the next window's step once its tasks are
+    # present, reproducing the monolithic stage sequence bit-for-bit.
+    t_next: jax.Array | None = None
 
     # -- filled by the `advance` stage -----------------------------------
     r: jax.Array | None = None        # f32[F] fair-share rates this interval

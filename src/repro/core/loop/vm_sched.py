@@ -45,6 +45,13 @@ def serve_queue(spec, params, trace, st: CloudState, *,
     lay = spec.layout
     P, V, T = spec.n_pm, spec.n_vm, trace.n
     qkey = trace.cores if smallest_first else trace.arrival
+    # Global task ids (streaming slot tables, DESIGN.md §8): slot order is
+    # recycled, so queue-key ties must break on the *global* id to match
+    # the monolithic engine, whose ``argmin`` tie-break is the task index
+    # — i.e. the global id.  A monolithic trace (``gid is None``) keeps
+    # the plain first-index ``argmin``: identical choice, identical
+    # program.
+    gid = getattr(trace, "gid", None)
 
     def queued_mask(task_state):
         return (task_state == TASK_PENDING) & (trace.arrival <= st.t)
@@ -58,7 +65,13 @@ def serve_queue(spec, params, trace, st: CloudState, *,
         queued = queued_mask(st2.task_state)
         any_q = queued.any()
         key = jnp.where(queued, qkey, jnp.inf)
-        head = jnp.argmin(key).astype(jnp.int32)
+        if gid is None:
+            head = jnp.argmin(key).astype(jnp.int32)
+        else:
+            best = jnp.min(key)
+            cand = queued & (key == best)
+            head_gid = jnp.min(jnp.where(cand, gid, jnp.iinfo(jnp.int32).max))
+            head = jnp.argmax(cand & (gid == head_gid)).astype(jnp.int32)
         h_cores = trace.cores[head]
 
         oversize = h_cores > params.pm_cores  # can never fit -> reject always

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import zlib
+from typing import NamedTuple
 
 import numpy as np
 
@@ -108,6 +109,88 @@ def gwa_like_trace(
         arrival=jnp.asarray(arrival),
         cores=jnp.asarray(cores),
         work=jnp.asarray(runtime * cores * perf_core),
+    )
+
+
+class WindowedTrace(NamedTuple):
+    """A trace chunked on the task axis (DESIGN.md §8): ``n_windows``
+    windows of one fixed shape ``[W]``, the last one padded (``gid == -1``
+    marks a pad entry: ``arrival == inf``, zero cores/work).  The fixed
+    window shape is the whole point — :func:`repro.core.engine.simulate_stream`
+    compiles once per ``(spec, W, Q)``, never per total trace length."""
+
+    arrival: object  # f32[n_windows, W]
+    cores: object    # f32[n_windows, W]
+    work: object     # f32[n_windows, W]
+    gid: object      # i32[n_windows, W]; -1 = pad
+
+    @property
+    def n_windows(self) -> int:
+        return self.arrival.shape[0]
+
+    @property
+    def window_size(self) -> int:
+        return self.arrival.shape[1]
+
+    @property
+    def n_tasks(self) -> int:
+        """Number of real (non-pad) tasks across all windows."""
+        return int(np.sum(np.asarray(self.gid) >= 0))
+
+    def window(self, k: int) -> Trace:
+        """Window ``k`` as a gid-carrying :class:`Trace`."""
+        return Trace(arrival=self.arrival[k], cores=self.cores[k],
+                     work=self.work[k], gid=self.gid[k])
+
+    def windows(self):
+        """Iterate the windows in stream order (``__iter__`` stays the
+        NamedTuple field iteration jax's pytree flattening relies on)."""
+        for k in range(self.n_windows):
+            yield self.window(k)
+
+
+def chunk_trace(trace: Trace, window: int) -> WindowedTrace:
+    """Chunk a time-sorted :class:`Trace` into fixed-shape windows for
+    :func:`repro.core.engine.simulate_stream` (DESIGN.md §8).
+
+    The last window is padded up to ``window`` tasks and masked
+    (``gid == -1``, ``arrival == inf``); global ids are the original task
+    indices, so a streamed replay's per-task outputs align with the
+    monolithic trace axis.  Raises on an unsorted trace — the streaming
+    sentinel (first arrival of the next window) is only the true horizon
+    minimum when arrivals never go back in time.
+    """
+    W = int(window)
+    if W <= 0:
+        raise ValueError(f"window must be positive, got {window}")
+    arrival = np.asarray(trace.arrival, np.float32)
+    T = arrival.shape[0]
+    if T == 0:
+        raise ValueError("chunk_trace needs a non-empty trace")
+    if np.any(np.diff(arrival) < 0):
+        k = int(np.argmax(np.diff(arrival) < 0))
+        raise ValueError(
+            f"chunk_trace needs a time-sorted trace, but arrival[{k + 1}]="
+            f"{arrival[k + 1]} < arrival[{k}]={arrival[k]}; sort the tasks "
+            f"by arrival first (np.argsort) — streaming windows rely on "
+            f"the next window's first arrival bounding every later one")
+    import jax.numpy as jnp
+
+    gid = (np.asarray(trace.gid, np.int32) if trace.gid is not None
+           else np.arange(T, dtype=np.int32))
+    n_windows = -(-T // W)
+    pad = n_windows * W - T
+
+    def chunk(x, fill, dtype):
+        x = np.asarray(x, dtype)
+        x = np.concatenate([x, np.full((pad,), fill, dtype)])
+        return jnp.asarray(x.reshape(n_windows, W))
+
+    return WindowedTrace(
+        arrival=chunk(arrival, np.inf, np.float32),
+        cores=chunk(trace.cores, 0.0, np.float32),
+        work=chunk(trace.work, 0.0, np.float32),
+        gid=chunk(gid, -1, np.int32),
     )
 
 

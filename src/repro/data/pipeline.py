@@ -96,6 +96,66 @@ def _plant(toks: np.ndarray, cfg: DataConfig) -> None:
     toks[:, sel] = (toks[:, np.roll(idx, 1)[sel]] * 31 + 7) % cfg.vocab
 
 
+def gwa_window_stream(family: str, n_tasks: int, window: int, *,
+                      perf_core: float = 1.0, max_cores: int | None = None,
+                      runtime_cap_s: float = 3.0e5, seed: int = 0):
+    """Generator of GWA-moment-matched trace *windows* (DESIGN.md §8).
+
+    The streaming counterpart of :func:`repro.core.trace.gwa_like_trace`:
+    yields fixed-shape ``[window]`` gid-carrying
+    :class:`~repro.core.engine.Trace` windows one at a time — the full
+    ``n_tasks`` trace is never materialised, so a datacenter-year workload
+    streams through :func:`repro.core.engine.simulate_stream` in O(window)
+    host memory.  Same counter-keyed determinism protocol as
+    :func:`make_batch`: window ``k``'s draws come from a Philox stream
+    keyed on ``(seed, family, k)``; only the arrival-time offset (a
+    float64 scalar) carries across windows, so arrivals are globally
+    sorted.  The last window is padded and masked (``gid == -1``).
+    """
+    import zlib
+
+    import jax.numpy as jnp
+
+    from repro.core.engine import Trace
+    from repro.core.trace import GWA_FAMILIES
+
+    fam = GWA_FAMILIES[family]
+    cap_cores = float(max_cores if max_cores is not None else fam.max_cores)
+    probs = np.asarray(fam.par_probs, np.float64)
+    probs = probs / probs.sum()
+    fam_key = zlib.crc32(family.encode()) & 0xFFFFFFFF
+    W = int(window)
+    if W <= 0:
+        raise ValueError(f"window must be positive, got {window}")
+    offset = 0.0  # float64 running arrival time, carried across windows
+    for k, start in enumerate(range(0, n_tasks, W)):
+        n = min(W, n_tasks - start)
+        key = (seed & 0xFFFFFFFF) << 64 | fam_key << 32 | (k & 0xFFFFFFFF)
+        rng = np.random.Generator(np.random.Philox(key=key))
+        inter = fam.interarrival_scale * rng.weibull(
+            fam.interarrival_shape, n)
+        arrival = offset + np.cumsum(inter)
+        offset = float(arrival[-1])
+        runtime = np.minimum(
+            np.exp(rng.normal(fam.runtime_logmean, fam.runtime_logstd, n)),
+            runtime_cap_s)
+        cores = np.minimum(
+            2.0 ** rng.choice(len(probs), size=n, p=probs), cap_cores)
+        pad = W - n
+
+        def padded(x, fill, dtype):
+            x = np.asarray(x, dtype)
+            return jnp.asarray(np.concatenate(
+                [x, np.full((pad,), fill, dtype)]) if pad else x)
+
+        yield Trace(
+            arrival=padded(arrival, np.inf, np.float32),
+            cores=padded(cores, 0.0, np.float32),
+            work=padded(runtime * cores * perf_core, 0.0, np.float32),
+            gid=padded(np.arange(start, start + n), -1, np.int32),
+        )
+
+
 class DataIterator:
     """Stateful convenience wrapper (state = step counter)."""
 

@@ -51,8 +51,11 @@ def batch_flags(spec: engine.CloudSpec, trace: engine.Trace,
     vmap-axis rule so shard_map's layout can never diverge from
     ``simulate_batch``."""
     axes = (engine._trace_axes(trace), engine._params_axes(spec, params))
-    return tuple(a == 0 for a in jax.tree.leaves(
-        axes, is_leaf=lambda x: x is None))
+    # flatten_up_to aligns one axis entry per *value* leaf — structural
+    # Nones (e.g. a monolithic Trace's gid) stay structure on both sides,
+    # while a None axis over a real array leaf still yields a flag
+    entries = jax.tree.structure((trace, params)).flatten_up_to(axes)
+    return tuple(a == 0 for a in entries)
 
 
 def batch_size(spec: engine.CloudSpec, trace: engine.Trace,
@@ -142,6 +145,125 @@ def simulate_batch_sharded(
     treedef = jax.tree.structure((trace, params))
     runner = _sharded_runner(spec, devs[:d], treedef, flags)
     res = runner((trace, params), jnp.asarray(t_stop, jnp.float32))
+    if pad:
+        res = jax.tree.map(lambda l: l[:n], res)
+    return res
+
+
+@functools.lru_cache(maxsize=64)
+def _stream_runner(spec, devs, treedef, flags):
+    """One compiled *batched* window step per (spec, device set, params
+    structure, batch-flag signature) — the streaming counterpart of
+    :func:`_sharded_runner`: ``vmap`` over the carried state + batched
+    params leaves, ``shard_map`` over the mesh when more than one device
+    holds a shard.  Windows are replicated (every lane replays the same
+    trace; the sweep axis is the parameter/scheduler grid)."""
+    paxes = treedef.unflatten([0 if f else None for f in flags])
+
+    def step(carry, window, params, t_prev_next, t_next, t_stop):
+        return engine._stream_step_impl(spec, carry, window, params,
+                                        t_prev_next, t_next, t_stop)
+
+    vstep = jax.vmap(step, in_axes=(0, None, paxes, None, None, None))
+    if len(devs) > 1:
+        mesh = Mesh(np.asarray(devs), ("batch",))
+        pspecs = treedef.unflatten([P("batch") if f else P() for f in flags])
+        vstep = shard_map(vstep, mesh=mesh,
+                          in_specs=(P("batch"), P(), pspecs, P(), P(), P()),
+                          out_specs=P("batch"), check_rep=False)
+    return jax.jit(vstep, donate_argnums=(0,))
+
+
+def simulate_stream_batch(
+        spec: engine.CloudSpec, windows, params: engine.CloudParams, *,
+        n_slots: int | None = None,
+        t_stop: float | jax.Array = jnp.inf,
+        devices=None) -> engine.StreamResult:
+    """:func:`repro.core.engine.simulate_stream` over a batched parameter
+    sweep (stacked with ``stack_params``/``param_grid``): every lane
+    replays the same windowed trace under its own parameter/scheduler
+    point, vmapped through one compiled window step and sharded over
+    ``devices`` exactly like :func:`simulate_batch_sharded` (pad-and-mask
+    on awkward batch sizes, single-device fallback, per-lane results
+    bit-identical to sequential :func:`simulate_stream` calls).
+
+    Returns a :class:`~repro.core.engine.StreamResult` whose every leaf
+    carries the batch as its leading axis.
+    """
+    params = jax.tree.map(jnp.asarray, params)
+    paxes = engine._params_axes(spec, params)
+    flags = tuple(a == 0 for a in
+                  jax.tree.structure(params).flatten_up_to(paxes))
+    if not any(flags):
+        raise ValueError(
+            "simulate_stream_batch needs at least one batched params leaf "
+            "(leading batch axis); use simulate_stream for a single point")
+    sizes = {int(jnp.shape(l)[0]) for l, f in
+             zip(jax.tree.leaves(params), flags) if f}
+    if len(sizes) > 1:
+        raise ValueError(
+            f"inconsistent batch-axis lengths across leaves: {sorted(sizes)}")
+    n = sizes.pop()
+    devs = tuple(jax.devices() if devices is None else devices)
+    d = shard_count(n, len(devs))
+    pad = pad_rows(n, d) if d > 1 else 0
+    if pad:
+        params = _pad_batch(params, flags, pad)
+    treedef = jax.tree.structure(params)
+    runner = _stream_runner(spec, devs[:d] if d > 1 else devs[:1],
+                            treedef, flags)
+    paxes = engine._params_axes(spec, params)
+
+    it, W = engine._as_window_iter(windows)
+    cur = next(it, None)
+    if cur is None:
+        raise ValueError("simulate_stream_batch needs at least one window")
+    if W is None:
+        it, _ = engine._as_window_iter(engine._chain_one(cur, it),
+                                       window_size=cur.n)
+        cur = next(it)
+    Q = engine.default_n_slots(spec, cur.n) if n_slots is None else int(n_slots)
+    carry = jax.vmap(lambda pp: engine.init_stream(spec, Q, pp),
+                     in_axes=(paxes,))(params)
+    t_stop = jnp.asarray(t_stop, jnp.float32)
+    t_prev_next = jnp.float32(0.0)
+    outs = []
+    while cur is not None:
+        nxt = next(it, None)
+        t_next = (jnp.float32(jnp.inf) if nxt is None
+                  else engine._first_arrival(nxt))
+        carry, ys = runner(carry, cur, params, t_prev_next, t_next, t_stop)
+        outs.append(ys)
+        t_prev_next, cur = t_next, nxt
+
+    gids = jnp.concatenate([o["gid"] for o in outs], axis=-1)
+    t_done = jnp.concatenate([o["t_done"] for o in outs], axis=-1)
+    rej = jnp.concatenate([o["rejected"] for o in outs], axis=-1)
+    n_total = int(jnp.maximum(
+        jnp.max(gids, initial=-1), jnp.max(carry.slots.gid, initial=-1))) + 1
+
+    def scatter(g, td, rj):
+        idx = jnp.where(g >= 0, g, n_total)
+        completion = jnp.full((n_total,), jnp.inf, jnp.float32).at[idx].set(
+            td, mode="drop")
+        rejected = jnp.zeros((n_total,), bool).at[idx].set(rj, mode="drop")
+        return completion, rejected
+
+    completion, rejected = jax.vmap(scatter)(gids, t_done, rej)
+    st = carry.state
+    res = engine.StreamResult(
+        state=st,
+        completion=completion,
+        rejected=rejected,
+        energy=st.meters.pm.energy,
+        energy_sampled=st.meters.pm_sampled,
+        meters=st.meters,
+        n_events=st.n_events,
+        t_end=st.t,
+        overflow=st.overflow,
+        window_t_end=jnp.stack([o["t_end"] for o in outs], axis=-1),
+        window_energy=jnp.stack([o["energy"] for o in outs], axis=-1),
+    )
     if pad:
         res = jax.tree.map(lambda l: l[:n], res)
     return res

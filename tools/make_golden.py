@@ -83,11 +83,26 @@ def scenarios():
             n_pm=3, n_vm=12, pm_cores=4.0, pm_sched="ondemand")
         return spec, engine.simulate(spec, tr, params=params, t_stop=30.0)
 
+    def streaming_windows():
+        # windowed replay (DESIGN.md §8): StreamResult leaves pinned over
+        # a 4-way chunk of the (time-sorted) scenario trace
+        from repro.core.trace import chunk_trace
+        order = np.argsort(np.asarray(tr.arrival), kind="stable")
+        tr_sorted = engine.Trace(
+            arrival=tr.arrival[order], cores=tr.cores[order],
+            work=tr.work[order])
+        spec, params = engine.make_cloud(
+            n_pm=3, n_vm=12, pm_cores=4.0, vm_sched="smallestfirst",
+            pm_sched="ondemand", metering_period=0.25)
+        wt = chunk_trace(tr_sorted, -(-tr_sorted.n // 4))
+        return spec, engine.simulate_stream(spec, wt, params=params)
+
     return [("seq", seq), ("batched", batched),
             ("complex_power", complex_power), ("sampled", sampled),
             ("migration_policy", migration_policy),
             ("equal_share", equal_share),
-            ("t_stop_partial", t_stop_partial)]
+            ("t_stop_partial", t_stop_partial),
+            ("streaming_windows", streaming_windows)]
 
 
 def flatten_result(name: str, res) -> dict[str, np.ndarray]:
