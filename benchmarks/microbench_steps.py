@@ -1,0 +1,66 @@
+"""Microbench for the coalesced-stepping factor K (DESIGN.md §7).
+
+``spec.steps_per_iter`` controls how many pipeline micro-steps one
+``lax.while_loop`` body runs; K > 1 trades loop round-trips for
+``lax.cond``-guarded extra passes.  The winner is backend-dependent:
+XLA:CPU's while_loop round-trip is a few hundred nanoseconds, so extra
+passes buy nothing there, while dispatch-bound backends (an accelerator
+driving many tiny kernels per pass) amortize a much larger per-iteration
+overhead across the coalesced steps.
+
+``repro.core.loop.driver.DEFAULT_STEPS_PER_ITER`` is set from this
+sweep's winner on the development host — rerun with
+``python -m benchmarks.run --only microbench_steps`` when moving to a new
+backend and adjust the default (or pin ``spec.steps_per_iter`` directly)
+if the winner moves.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.core import engine
+from repro.core.trace import filter_fitting, gwa_like_trace
+
+
+def _throughput(spec, params, trace) -> tuple[float, int]:
+    res = engine.simulate(spec, trace, params=params)
+    jax.block_until_ready(res.t_end)
+    t0 = time.time()
+    res = engine.simulate(spec, trace, params=params)
+    jax.block_until_ready(res.t_end)
+    wall = time.time() - t0
+    return wall, int(np.asarray(res.n_events))
+
+
+def run(quick=True) -> list[dict]:
+    ks = (1, 2, 4) if quick else (1, 2, 4, 8)
+    n_pm, n_vm, n_tasks = 20, 256, 200
+    trace = filter_fitting(gwa_like_trace("das2", n_tasks, seed=7), 64.0)
+    base_spec, params = engine.make_cloud(n_pm=n_pm, n_vm=n_vm,
+                                          pm_cores=64.0,
+                                          max_events=4_000_000)
+    rows = []
+    best_k, best_tput = 0, -1.0
+    for k in ks:
+        spec = dataclasses.replace(base_spec, steps_per_iter=k)
+        wall, events = _throughput(spec, params, trace)
+        tput = events / wall
+        if tput > best_tput:
+            best_k, best_tput = k, tput
+        rows.append({
+            "name": "microbench_steps", "steps_per_iter": k,
+            "n_pm": n_pm, "n_vm": n_vm, "events": events,
+            "wall_s": round(wall, 4), "events_per_s": round(tput, 1),
+        })
+    from repro.core.loop import driver
+    rows.append({
+        "name": "microbench_steps_winner", "best_steps_per_iter": best_k,
+        "events_per_s": round(best_tput, 1),
+        "default_steps_per_iter": driver.DEFAULT_STEPS_PER_ITER,
+        "default_is_winner": bool(best_k == driver.DEFAULT_STEPS_PER_ITER),
+    })
+    return rows

@@ -16,6 +16,10 @@ def main(argv=None) -> int:
     ap.add_argument("--only", default="",
                     help="comma list of module names to run")
     ap.add_argument("--out", default="experiments/bench")
+    ap.add_argument("--profile", default="", metavar="DIR",
+                    help="capture a jax.profiler trace of each module into "
+                         "DIR (open in Perfetto: ui.perfetto.dev, or "
+                         "tensorboard --logdir DIR)")
     args = ap.parse_args(argv)
     quick = not args.full
 
@@ -25,9 +29,10 @@ def main(argv=None) -> int:
     compile_cache.enable()
 
     from benchmarks import (consolidation_bench, energy_overhead,
-                            ensemble_bench, pareto_bench, roofline, scaling,
-                            sched_bench, sharing_perf, streaming_bench,
-                            sweep_bench, traces_bench, validation)
+                            ensemble_bench, microbench_steps, pareto_bench,
+                            roofline, scaling, sched_bench, sharing_perf,
+                            streaming_bench, sweep_bench, traces_bench,
+                            validation)
     modules = {
         "validation": validation,        # Fig 7/8/9/10
         "sharing_perf": sharing_perf,    # Fig 12 / Table 3
@@ -41,6 +46,7 @@ def main(argv=None) -> int:
         "ensemble": ensemble_bench,      # trace-ensemble experiment (sharded)
         "consolidation": consolidation_bench,  # in-loop migration policy
         "streaming": streaming_bench,    # windowed datacenter-year replay
+        "microbench_steps": microbench_steps,  # K coalescing tuner (§7)
     }
     if args.only:
         keep = set(args.only.split(","))
@@ -49,25 +55,41 @@ def main(argv=None) -> int:
     outdir = Path(args.out)
     outdir.mkdir(parents=True, exist_ok=True)
     failures = 0
+    if args.profile:
+        import jax
+        Path(args.profile).mkdir(parents=True, exist_ok=True)
     for name, mod in modules.items():
         t0 = time.time()
         try:
-            rows = mod.run(quick=quick)
+            if args.profile:
+                # one Perfetto-viewable trace per module: compile wall and
+                # per-iteration device ops land in separate lanes, so the
+                # event-loop hot path is readable at a glance
+                with jax.profiler.trace(str(Path(args.profile) / name)):
+                    rows = mod.run(quick=quick)
+            else:
+                rows = mod.run(quick=quick)
             status = "ok"
         except Exception:
             rows = [{"error": traceback.format_exc()[-2000:]}]
             status = "FAIL"
             failures += 1
         wall = time.time() - t0
-        (outdir / f"{name}.json").write_text(json.dumps(rows, indent=1))
-        if (name in ("sweep", "scaling", "pareto", "ensemble",
-                     "consolidation", "streaming") and status == "ok"):
-            # stable perf-trajectory artifacts: events/sec of the batched
-            # sweep, the sharded experiment kinds and the consolidation
-            # tournament (only on success — never clobber the trajectory
-            # with an error)
-            (outdir / f"BENCH_{name}.json").write_text(
+        # One canonical artifact per module.  The perf-trajectory modules
+        # (batched sweep, scaling grid, sharded experiment kinds, the
+        # consolidation tournament, streaming replay) write the
+        # ``BENCH_``-prefixed files CI uploads and tools/check_bench.py
+        # guards; everything else writes a bare ``{name}.json``.  A failed
+        # trajectory run never clobbers its artifact — the traceback goes
+        # to ``{name}.error.json`` (and stdout) instead.
+        trajectory = name in ("sweep", "scaling", "pareto", "ensemble",
+                              "consolidation", "streaming")
+        if trajectory and status != "ok":
+            (outdir / f"{name}.error.json").write_text(
                 json.dumps(rows, indent=1))
+        else:
+            out_name = f"BENCH_{name}.json" if trajectory else f"{name}.json"
+            (outdir / out_name).write_text(json.dumps(rows, indent=1))
         print(f"== {name} [{status}] ({wall:.1f}s) " + "=" * 40)
         for row in rows if isinstance(rows, list) else [rows]:
             print("  " + json.dumps(row)[:240])

@@ -70,6 +70,7 @@ from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import compile_cache as _compile_cache
 from . import loop
@@ -136,11 +137,22 @@ class CloudSpec:
     max_migrations: int = 4      # per-iteration move cap for multi-VM
     #                              evacuation policies (static: plan length)
     meters: MeterTopology = MeterTopology()  # which meters exist (§3.3)
+    compact: int = -1            # active-set compaction bucket (DESIGN.md §7):
+    #                              -1 auto watermark, 0 off, >0 explicit size
+    #                              (rounded up to a power of two)
+    steps_per_iter: int = 0      # coalesced event stepping: pipeline passes
+    #                              per while_loop body (0 = tuned default)
 
     def __post_init__(self):
         assert self.scheduler in SCHEDULERS, (
             f"unknown sharing scheduler {self.scheduler!r}; "
             f"registered: {sorted(SCHEDULERS)}")
+        assert self.compact >= -1, (
+            f"spec.compact must be -1 (auto), 0 (off) or a positive bucket "
+            f"size, got {self.compact}")
+        assert self.steps_per_iter >= 0, (
+            f"spec.steps_per_iter must be >= 0 (0 = auto), "
+            f"got {self.steps_per_iter}")
 
     @property
     def layout(self) -> mc.SpreaderLayout:
@@ -375,19 +387,26 @@ def init_state(spec: CloudSpec, trace: Trace,
 
 def _simulate_impl(spec: CloudSpec, trace: Trace, params: CloudParams,
                    state: CloudState | None,
-                   t_stop: jax.Array) -> CloudResult:
+                   t_stop: jax.Array) -> tuple[CloudResult, jax.Array]:
     """Single-scenario engine: the staged pipeline (repro.core.loop) inside
     one ``lax.while_loop``.  Trace it once, run it for every parameter
-    point — no python branch here depends on a params value."""
+    point — no python branch here depends on a params value.
+
+    Returns ``(result, compact_ok)``: the second element is the loop's
+    accumulated active-set-compaction verdict (DESIGN.md §7) — ``False``
+    means a bucket overflowed at some iteration and the run must be
+    replayed with ``spec.compact = 0`` (the host wrappers do)."""
     st0 = init_state(spec, trace, params) if state is None else state
     st0 = loop.management_pass(spec, params, trace, st0)
     t_stop = jnp.asarray(t_stop, jnp.float32)
 
-    def cond(st: CloudState):
+    def cond(carry):
+        st, _ok = carry
         return st.running & (st.n_events < spec.max_events)
 
-    st = jax.lax.while_loop(
-        cond, loop.make_body(spec, params, trace, t_stop), st0)
+    st, ok = jax.lax.while_loop(
+        cond, loop.make_body(spec, params, trace, t_stop),
+        (st0, jnp.bool_(True)))
     return CloudResult(
         state=st,
         completion=st.t_done,
@@ -398,11 +417,47 @@ def _simulate_impl(spec: CloudSpec, trace: Trace, params: CloudParams,
         n_events=st.n_events,
         t_end=st.t,
         overflow=st.overflow,
-    )
+    ), ok
+
+
+def dense_spec(spec: CloudSpec) -> CloudSpec:
+    """``spec`` with active-set compaction disabled — the overflow-replay
+    target (bit-identical results, no bucket to overflow)."""
+    return dataclasses.replace(spec, compact=0)
+
+
+def _needs_dense_rerun(spec: CloudSpec, ok) -> bool:
+    """Host-side overflow verdict: True when compaction was enabled for
+    ``spec`` and some lane's bucket overflowed.  Inside a trace (``ok`` is
+    a tracer — e.g. the shard_map runners) the check is deferred to the
+    outermost host wrapper, which sees the concrete flag."""
+    from .loop.compact import compact_bucket
+    if compact_bucket(spec) == 0:
+        return False
+    if isinstance(ok, jax.core.Tracer):
+        return False
+    return not bool(np.all(np.asarray(ok)))
+
+
+def _warn_dense_rerun(spec: CloudSpec):
+    import warnings
+    from .loop.compact import compact_bucket
+    warnings.warn(
+        f"active-set compaction bucket ({compact_bucket(spec)}) overflowed; "
+        f"replaying the scenario with compact=0 (results are bit-identical; "
+        f"set spec.compact to a larger bucket to avoid the replay)",
+        RuntimeWarning, stacklevel=3)
 
 
 @functools.partial(jax.jit, static_argnames=("spec",),
                    donate_argnames=("state",))
+def _simulate_jit(spec: CloudSpec, trace: Trace,
+                  params: CloudParams,
+                  state: CloudState | None,
+                  t_stop: float | jax.Array):
+    return _simulate_impl(spec, trace, params, state, t_stop)
+
+
 def simulate(spec: CloudSpec, trace: Trace,
              params: CloudParams | None = None,
              state: CloudState | None = None,
@@ -411,11 +466,23 @@ def simulate(spec: CloudSpec, trace: Trace,
 
     A caller-provided ``state`` is *donated*: its buffers are reused for
     the result's carried state and must not be read again afterwards (copy
-    with ``jax.tree.map(jnp.copy, st)`` to keep a live snapshot).
+    with ``jax.tree.map(jnp.copy, st)`` to keep a live snapshot).  Because
+    donation makes an overflow replay impossible, a resumed run disables
+    active-set compaction up front — bit-identical either way (DESIGN.md
+    §7).
     """
     if params is None:
         params = CloudParams.for_spec(spec)
-    return _simulate_impl(spec, trace, params, state, t_stop)
+    if state is not None:
+        spec = dense_spec(spec)
+    res, ok = _simulate_jit(spec, trace, params, state, t_stop)
+    if _needs_dense_rerun(spec, ok):
+        _warn_dense_rerun(spec)
+        res, _ = _simulate_jit(dense_spec(spec), trace, params, None, t_stop)
+    return res
+
+
+simulate.clear_cache = _simulate_jit.clear_cache  # registry invalidation
 
 
 def _trace_axes(trace: Trace):
@@ -430,19 +497,12 @@ def _params_axes(spec: CloudSpec, params: CloudParams):
 
 
 @functools.partial(jax.jit, static_argnames=("spec",))
-def simulate_batch(spec: CloudSpec, trace: Trace, params: CloudParams,
-                   t_stop: float | jax.Array = jnp.inf) -> CloudResult:
-    """Batched scenario sweep: one jit, one trace of the engine, ``vmap``
-    over every :class:`Trace` and/or :class:`CloudParams` leaf that carries
-    a leading batch axis (leaves without one broadcast).
-
-    Returns a :class:`CloudResult` whose every leaf has the batch as its
-    leading axis.  Per-point results are numerically identical to the
-    corresponding sequential :func:`simulate` calls.  Batch-axis semantics
-    and the recompile rules are documented in DESIGN.md §4; use
-    :func:`simulate_batch_sharded` (or the experiment layer in
-    :mod:`repro.experiments`) to spread the batch over multiple devices.
-    """
+def _simulate_batch_jit(spec: CloudSpec, trace: Trace, params: CloudParams,
+                        t_stop: float | jax.Array):
+    """The vmapped engine returning ``(results, per-lane compact_ok)`` —
+    the traced core of :func:`simulate_batch`, also the entry point the
+    shard_map runner (:mod:`repro.experiments.shard`) wraps so *its* host
+    wrapper can check the concrete overflow flags."""
     taxes = _trace_axes(trace)
     paxes = _params_axes(spec, params)
     flat_axes = jax.tree.flatten((taxes, paxes),
@@ -456,6 +516,31 @@ def simulate_batch(spec: CloudSpec, trace: Trace, params: CloudParams,
         lambda tr, pp: _simulate_impl(spec, tr, pp, None, t_stop),
         in_axes=(taxes, paxes))
     return run(trace, params)
+
+
+def simulate_batch(spec: CloudSpec, trace: Trace, params: CloudParams,
+                   t_stop: float | jax.Array = jnp.inf) -> CloudResult:
+    """Batched scenario sweep: one jit, one trace of the engine, ``vmap``
+    over every :class:`Trace` and/or :class:`CloudParams` leaf that carries
+    a leading batch axis (leaves without one broadcast).
+
+    Returns a :class:`CloudResult` whose every leaf has the batch as its
+    leading axis.  Per-point results are numerically identical to the
+    corresponding sequential :func:`simulate` calls.  Batch-axis semantics
+    and the recompile rules are documented in DESIGN.md §4; use
+    :func:`simulate_batch_sharded` (or the experiment layer in
+    :mod:`repro.experiments`) to spread the batch over multiple devices.
+    An active-set-compaction bucket overflow on any lane (DESIGN.md §7)
+    replays the whole sweep with ``compact=0`` — bit-identical results.
+    """
+    res, ok = _simulate_batch_jit(spec, trace, params, t_stop)
+    if _needs_dense_rerun(spec, ok):
+        _warn_dense_rerun(spec)
+        res, _ = _simulate_batch_jit(dense_spec(spec), trace, params, t_stop)
+    return res
+
+
+simulate_batch.clear_cache = _simulate_batch_jit.clear_cache
 
 
 def simulate_batch_sharded(spec: CloudSpec, trace: Trace,
@@ -489,11 +574,15 @@ class StreamCarry(NamedTuple):
     is the slot-table :class:`Trace` those task indices resolve against —
     a free slot has ``gid == -1``, ``arrival == inf``, ``task_state ==
     TASK_DONE``, which makes it inert in every queue/horizon/termination
-    mask.  Both halves are donated to each window step.
+    mask.  ``compact_ok`` accumulates the active-set-compaction bucket
+    check (DESIGN.md §7) across windows so the host can replay the whole
+    stream densely on overflow.  All leaves are donated to each window
+    step.
     """
 
     state: CloudState
     slots: Trace
+    compact_ok: jax.Array
 
 
 class StreamResult(NamedTuple):
@@ -544,7 +633,8 @@ def init_stream(spec: CloudSpec, n_slots: int,
     # init_state shares its zero buffers across fields; the window step
     # *donates* the carry, and donating one buffer twice is an XLA error —
     # copy leaf-wise so every donated leaf owns its storage.
-    return jax.tree.map(jnp.copy, StreamCarry(state=st, slots=slots))
+    return jax.tree.map(jnp.copy, StreamCarry(
+        state=st, slots=slots, compact_ok=jnp.bool_(True)))
 
 
 def _stream_step_impl(spec: CloudSpec, carry: StreamCarry, window: Trace,
@@ -605,11 +695,13 @@ def _stream_step_impl(spec: CloudSpec, carry: StreamCarry, window: Trace,
     st = st._replace(running=do_mp & ~stopped)
 
     # ---- 3. the staged loop up to the next hand-over
-    def cond(s: CloudState):
+    def cond(c):
+        s = c[0]
         return s.running & (s.n_events < spec.max_events)
 
-    st = jax.lax.while_loop(
-        cond, loop.make_body(spec, params, slots, t_stop, t_next), st)
+    st, compact_ok = jax.lax.while_loop(
+        cond, loop.make_body(spec, params, slots, t_stop, t_next),
+        (st, carry.compact_ok))
 
     # ---- 4. flush terminal slots (compacted to the front), free them
     term = ((st.task_state == TASK_DONE) | (st.task_state == TASK_REJECTED)
@@ -636,7 +728,7 @@ def _stream_step_impl(spec: CloudSpec, carry: StreamCarry, window: Trace,
         task_vm=jnp.where(term, -1, st.task_vm),
         t_done=jnp.where(term, jnp.inf, st.t_done),
     )
-    return StreamCarry(state=st, slots=slots), out
+    return StreamCarry(state=st, slots=slots, compact_ok=compact_ok), out
 
 
 @functools.partial(jax.jit, static_argnames=("spec",),
@@ -745,6 +837,21 @@ def simulate_stream(spec: CloudSpec, windows,
                                  t_prev_next, t_next, t_stop)
         outs.append(ys)
         t_prev_next, cur = t_next, nxt
+    if _needs_dense_rerun(spec, carry.compact_ok):
+        # A window's active set outgrew the compaction bucket.  Replayable
+        # inputs (WindowedTrace) restart the whole stream densely — the
+        # carried state already consumed compacted windows, so a mid-stream
+        # switch would not be bit-identical.  Consumed generators cannot be
+        # replayed; fail loudly rather than return silently-dense results.
+        if hasattr(windows, "n_windows") and hasattr(windows, "window"):
+            _warn_dense_rerun(spec)
+            return simulate_stream(dense_spec(spec), windows, params,
+                                   n_slots=Q, t_stop=t_stop)
+        raise RuntimeError(
+            "active-set compaction bucket overflowed mid-stream and the "
+            "window source is a consumed generator that cannot be "
+            "replayed; rerun with spec.compact=0 (dense) or pass a "
+            "replayable WindowedTrace")
     return _assemble_stream(spec, carry, outs)
 
 

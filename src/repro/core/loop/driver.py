@@ -69,17 +69,45 @@ def termination(ctx: StageCtx, st: CloudState, snap) -> CloudState:
     return st._replace(running=(ctx.has_event | changed) & more & ~hit_stop)
 
 
+# Coalesced event stepping (DESIGN.md §7): how many pipeline passes one
+# ``lax.while_loop`` body runs when ``spec.steps_per_iter == 0`` (auto).
+# Tuned by ``benchmarks/microbench_steps.py``: on XLA:CPU the while_loop
+# round-trip costs a few hundred nanoseconds, so K = 1 wins outright
+# (measured: K=1 3829 ev/s, K=2 3818, K=4 3623 at 20 PM x 256 VM) and
+# coalescing is kept as an opt-in (``spec.steps_per_iter``) for
+# dispatch-bound backends where the per-iteration overhead is worth
+# amortizing across cond-guarded extra passes.
+DEFAULT_STEPS_PER_ITER = 1
+
+
+def steps_per_iter(spec) -> int:
+    """The spec-static micro-step count K (>= 1)."""
+    k = getattr(spec, "steps_per_iter", 0)
+    return int(k) if k > 0 else DEFAULT_STEPS_PER_ITER
+
+
 def make_body(spec, params, trace, t_stop, t_next=None):
-    """The ``lax.while_loop`` body: one pipeline pass over the stages.
+    """The ``lax.while_loop`` body over a ``(state, compact_ok)`` carry:
+    K unrolled pipeline passes (coalesced event stepping, DESIGN.md §7)
+    guarded by an early-settled mask.
 
     ``t_next`` (streaming windows only, DESIGN.md §8) is the first arrival
     of the next trace window; ``None`` — the monolithic engine — composes
-    exactly the pre-streaming body.
+    exactly the pre-streaming body.  All events sharing one horizon
+    timestamp are already coalesced *within* a pass (every stage applies
+    its full completion/transition mask at ``t_new``); the K micro-steps
+    amortize the ``while_loop`` dispatch across successive horizons.  A
+    pass whose entry state is settled (``~running`` or the event budget
+    spent) is discarded wholesale by a tree-select, so the carried state
+    and event count are bit-identical to K == 1.
     """
+    # Hoisted per-trace precomputation: the sorted arrival vector the
+    # horizon's O(log T) searchsorted runs against (a loop constant).
+    arrival_sorted = jnp.sort(jnp.asarray(trace.arrival, jnp.float32))
 
-    def body(st: CloudState) -> CloudState:
+    def one_pass(st: CloudState):
         ctx = StageCtx(spec=spec, params=params, trace=trace, t_stop=t_stop,
-                       t_next=t_next)
+                       t_next=t_next, arrival_sorted=arrival_sorted)
         snap = (st.task_state, st.vstage, st.pstate, st.f_active)
         for stage in STAGES[:-N_MANAGEMENT_STAGES]:
             ctx, st = stage(ctx, st)
@@ -95,7 +123,31 @@ def make_body(spec, params, trace, t_stop, t_next=None):
             defer = jnp.isfinite(t_next) & (st_pre.t >= t_next)
             st = jax.tree.map(
                 lambda pre, post: jnp.where(defer, pre, post), st_pre, st)
-        return termination(ctx, st, snap)
+        ok = (ctx.compact.ok if ctx.compact is not None
+              else jnp.bool_(True))
+        return termination(ctx, st, snap), ok
+
+    K = steps_per_iter(spec)
+
+    def skip(st):
+        return st, jnp.bool_(True)
+
+    def body(carry):
+        st, ok = carry
+        # The first micro-step needs no settled guard: the loop condition
+        # that admitted this body already asserted it.
+        st, ok1 = one_pass(st)
+        ok = ok & ok1
+        for _ in range(K - 1):
+            # Guard via lax.cond: a settled state skips the pass outright
+            # (single-scenario runs pay ~nothing; under vmap the cond
+            # lowers to a per-lane select of both sides, same as the
+            # tree-select formulation it replaces — bit-identical either
+            # way, since a skipped pass returns the carry verbatim).
+            cont = st.running & (st.n_events < spec.max_events)
+            st, ok2 = jax.lax.cond(cont, one_pass, skip, st)
+            ok = ok & ok2
+        return st, ok
 
     return body
 

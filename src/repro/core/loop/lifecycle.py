@@ -22,6 +22,20 @@ from .state import BIG, KIND_MIGRATE, TASK_DONE, CloudState, StageCtx
 
 
 def vm_lifecycle(ctx: StageCtx, st: CloudState):
+    # Event gate (DESIGN.md §7): the stage reacts only to VM-flow
+    # completions and allocation expiries.  With neither, every write
+    # below selects the old value (all the ``*_done``/``expired`` masks
+    # are False, the scatter indices all drop, and ``free_cores`` gains an
+    # exact ``+0.0``) — skipping is bitwise identity.  Under vmap the cond
+    # lowers to a select; single-scenario runs skip the body outright.
+    fired = (ctx.done[:ctx.spec.n_vm].any()
+             | ((st.vstage == mc.VM_ALLOCATED)
+                & (st.vm_expiry <= ctx.t_new)).any())
+    return ctx, jax.lax.cond(
+        fired, lambda s: _vm_lifecycle_body(ctx, s), lambda s: s, st)
+
+
+def _vm_lifecycle_body(ctx: StageCtx, st: CloudState) -> CloudState:
     spec, params, trace = ctx.spec, ctx.params, ctx.trace
     lay = spec.layout
     P, V, T = spec.n_pm, spec.n_vm, trace.n
@@ -104,9 +118,8 @@ def vm_lifecycle(ctx: StageCtx, st: CloudState):
     free_cores = free_cores + freed[:, 1]
     vstage = jnp.where(expired, mc.VM_FREE, vstage)
 
-    st = st._replace(
+    return st._replace(
         f_pr=f_pr, f_total=f_total, f_pl=f_pl, f_prov=f_prov, f_cons=f_cons,
         f_release=f_release, f_kind=f_kind, f_active=f_active,
         task_state=task_state, t_done=t_done_arr,
         vstage=vstage, vm_host=new_host, free_cores=free_cores)
-    return ctx, st

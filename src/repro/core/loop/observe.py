@@ -14,6 +14,17 @@ Everything in the view is read from *interval-start* facts: the rates in
 ``ctx.r``/``ctx.live`` were computed against the pre-advance state and are
 constant over the whole interval, and the clock reference is ``ctx.t0``
 (the ``advance`` stage has already moved ``st.t`` to the interval end).
+
+With active-set compaction on (``ctx.compact``, DESIGN.md §7) the Eq. 6
+half runs over the active-flow bucket: influence labels propagate over
+the compacted live edges (every live edge has both endpoints in the
+spreader bucket, and an untouched spreader keeps its singleton
+self-label), and the per-VM attribution inputs scatter back into dense
+``V``-sized views — a VM outside the bucket has no live flow, hence no
+group membership and an exact-``+0.0`` rate fraction either way.  The
+meter *integration* itself stays dense: the per-VM Kahan accumulators
+fold their compensation term even on a zero-power interval, so skipping
+settled VMs would not be bit-identical.
 """
 from __future__ import annotations
 
@@ -23,7 +34,49 @@ import jax.numpy as jnp
 from .. import machine as mc
 from ..energy import MODEL_LINEAR, SimView, instantaneous_power, observe
 from ..influence import coupled_vm_counts, influence_labels
+from . import compact as cpk
 from .state import TASK_PENDING, CloudState, StageCtx
+
+
+def _eq6_views(ctx: StageCtx, st: CloudState, cpu_del: jax.Array):
+    """(vm_rate_frac, vm_host, vms_on_host) — Eq. 6 group membership via
+    the influence components, dense or bucket-compacted."""
+    spec = ctx.spec
+    lay = spec.layout
+    P, V = spec.n_pm, spec.n_vm
+    r, live = ctx.r, ctx.live
+    cp = ctx.compact
+
+    if cp is None:
+        labels = influence_labels(st.f_prov, st.f_cons, live, lay.S)
+        in_grp, vms_on_host = coupled_vm_counts(
+            labels, lay.cpu0 + st.vm_host, lay.vm0 + jnp.arange(V),
+            st.vm_host, P)
+        vm_rate_frac = (jnp.where(in_grp, r[:V], 0.0)
+                        / jnp.maximum(cpu_del[st.vm_host], 1e-30))
+        vm_host = jnp.where(in_grp, st.vm_host, -1)
+        return vm_rate_frac, vm_host, vms_on_host
+
+    live_b = cpk.gather_flows(cp, live, False)
+    labels_b = cpk.influence_labels_compact(cp, live_b)
+    is_vm = cp.fvalid & (cp.fidx < V)
+    v_scatter = jnp.where(is_vm, cp.fidx, V)          # V = scatter drop
+    v_c = jnp.minimum(v_scatter, V - 1)
+    vmh_b = st.vm_host[v_c]
+    la = cpk.label_lookup(cp, labels_b, lay.cpu0 + vmh_b)
+    lb = cpk.label_lookup(cp, labels_b, lay.vm0 + v_c)
+    in_grp_b = is_vm & (la == lb)
+    vms_on_host = jax.ops.segment_sum(
+        in_grp_b.astype(jnp.int32), jnp.where(is_vm, vmh_b, P),
+        num_segments=P)
+    r_b = cpk.gather_flows(cp, r, 0.0)
+    frac_b = (jnp.where(in_grp_b, r_b, 0.0)
+              / jnp.maximum(cpu_del[vmh_b], 1e-30))
+    vm_rate_frac = jnp.zeros((V,), jnp.float32).at[v_scatter].set(
+        frac_b, mode="drop")
+    vm_host = jnp.full((V,), -1, jnp.int32).at[v_scatter].set(
+        jnp.where(in_grp_b, vmh_b, -1), mode="drop")
+    return vm_rate_frac, vm_host, vms_on_host
 
 
 def build_view(ctx: StageCtx, st: CloudState) -> SimView:
@@ -38,7 +91,6 @@ def build_view(ctx: StageCtx, st: CloudState) -> SimView:
     lay = spec.layout
     P, V = spec.n_pm, spec.n_vm
     table = params.power
-    r, live = ctx.r, ctx.live
 
     # Per-provider delivered rate was already reduced by `advance`'s fused
     # provider scatter-add — reuse it instead of a second segment_sum.
@@ -52,13 +104,7 @@ def build_view(ctx: StageCtx, st: CloudState) -> SimView:
                        table.p_max[st.pstate] - p_idle, 0.0)
 
     if spec.meters.vm_direct:
-        labels = influence_labels(st.f_prov, st.f_cons, live, lay.S)
-        in_grp, vms_on_host = coupled_vm_counts(
-            labels, lay.cpu0 + st.vm_host, lay.vm0 + jnp.arange(V),
-            st.vm_host, P)
-        vm_rate_frac = (jnp.where(in_grp, r[:V], 0.0)
-                        / jnp.maximum(cpu_del[st.vm_host], 1e-30))
-        vm_host = jnp.where(in_grp, st.vm_host, -1)
+        vm_rate_frac, vm_host, vms_on_host = _eq6_views(ctx, st, cpu_del)
     else:
         vms_on_host = jnp.zeros((P,), jnp.int32)
         vm_rate_frac = jnp.zeros((V,), jnp.float32)

@@ -29,5 +29,13 @@ from .state import CloudState, StageCtx
 
 def pm_sched(ctx: StageCtx, st: CloudState):
     code = jnp.asarray(ctx.params.pm_sched, jnp.int32)
-    st = jax.lax.switch(code, registry.stage_branches("pm", ctx), st)
+    # Event gate (registry trigger, DESIGN.md §7): e.g. always-on is the
+    # identity and gates constant-False; on-demand gates on "queue
+    # non-empty or a loadless running host exists".  Policies without a
+    # declared trigger run unconditionally, exactly as before.
+    may = jax.lax.switch(code, registry.trigger_branches("pm", ctx), st)
+    st = jax.lax.cond(
+        may,
+        lambda s: jax.lax.switch(code, registry.stage_branches("pm", ctx), s),
+        lambda s: s, st)
     return ctx, st

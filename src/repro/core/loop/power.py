@@ -10,6 +10,7 @@ State delta: ``pstate``, ``pstate_end``, and the hidden-consumer suffix of
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from ..energy import PM_OFF, PM_RUNNING, PM_SWITCHING_OFF, PM_SWITCHING_ON
@@ -17,6 +18,20 @@ from .state import CloudState, StageCtx
 
 
 def pm_power(ctx: StageCtx, st: CloudState):
+    # Event gate (DESIGN.md §7): transitions end either on a hidden-flow
+    # completion (complex model) or a pstate_end deadline; with neither
+    # fired this iteration every write below selects the old value, so
+    # skipping the body is bitwise identity.
+    spec = ctx.spec
+    switching = ((st.pstate == PM_SWITCHING_ON)
+                 | (st.pstate == PM_SWITCHING_OFF))
+    fired = (ctx.done[spec.n_vm:].any()
+             | (switching & (st.pstate_end <= ctx.t_new)).any())
+    return ctx, jax.lax.cond(
+        fired, lambda s: _pm_power_body(ctx, s), lambda s: s, st)
+
+
+def _pm_power_body(ctx: StageCtx, st: CloudState) -> CloudState:
     spec = ctx.spec
     P, V = spec.n_pm, spec.n_vm
     hid_slot = jnp.arange(P) + V
@@ -40,5 +55,5 @@ def pm_power(ctx: StageCtx, st: CloudState):
     pstate = jnp.where(poffend, PM_OFF, pstate)
     pstate_end = jnp.where(ponend | poffend, jnp.inf, pstate_end)
 
-    st = st._replace(pstate=pstate, pstate_end=pstate_end, f_active=f_active)
-    return ctx, st
+    return st._replace(pstate=pstate, pstate_end=pstate_end,
+                       f_active=f_active)

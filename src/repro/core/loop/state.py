@@ -130,8 +130,17 @@ class StageCtx(NamedTuple):
     # pass is replayed by the next window's step once its tasks are
     # present, reproducing the monolithic stage sequence bit-for-bit.
     t_next: jax.Array | None = None
+    # Arrivals presorted once per trace (hoisted out of the loop by
+    # ``make_body``): the horizon's task-arrival family collapses to one
+    # ``searchsorted`` against this vector — the next pending arrival is
+    # always the first strictly-future one, because a task whose arrival
+    # lies beyond the monotone clock can only ever be PENDING.  ``None``
+    # (e.g. the pre-loop management pass) keeps the dense arrival scan.
+    arrival_sorted: jax.Array | None = None
 
     # -- filled by the `advance` stage -----------------------------------
+    compact: Any = None          # loop.compact.Compact of this iteration
+    #                              (None: compaction disabled for the spec)
     r: jax.Array | None = None        # f32[F] fair-share rates this interval
     live: jax.Array | None = None     # bool[F] flows that progressed
     thresh: jax.Array | None = None   # f32[F] completion epsilon

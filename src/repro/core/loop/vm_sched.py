@@ -126,5 +126,14 @@ def serve_queue(spec, params, trace, st: CloudState, *,
 
 def vm_sched(ctx: StageCtx, st: CloudState):
     code = jnp.asarray(ctx.params.vm_sched, jnp.int32)
-    st = jax.lax.switch(code, registry.stage_branches("vm", ctx), st)
+    # Event gate (registry trigger, DESIGN.md §7): skip the whole policy
+    # switch when the selected policy declares nothing-to-react-to —
+    # e.g. the builtin dispatchers are bitwise identity on an empty
+    # request queue.  Under vmap the cond lowers to a select (both sides
+    # computed per lane), so batched sweeps stay one program.
+    may = jax.lax.switch(code, registry.trigger_branches("vm", ctx), st)
+    st = jax.lax.cond(
+        may,
+        lambda s: jax.lax.switch(code, registry.stage_branches("vm", ctx), s),
+        lambda s: s, st)
     return ctx, st

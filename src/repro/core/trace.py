@@ -156,9 +156,12 @@ def chunk_trace(trace: Trace, window: int) -> WindowedTrace:
     The last window is padded up to ``window`` tasks and masked
     (``gid == -1``, ``arrival == inf``); global ids are the original task
     indices, so a streamed replay's per-task outputs align with the
-    monolithic trace axis.  Raises on an unsorted trace — the streaming
+    monolithic trace axis.  An unsorted trace is stably sorted by arrival
+    first (ties keep their original relative order) — the streaming
     sentinel (first arrival of the next window) is only the true horizon
-    minimum when arrivals never go back in time.
+    minimum when arrivals never go back in time, and each task carries
+    its *original* index as ``gid``, so per-task outputs still line up
+    with the caller's trace axis after the sort.
     """
     W = int(window)
     if W <= 0:
@@ -167,17 +170,16 @@ def chunk_trace(trace: Trace, window: int) -> WindowedTrace:
     T = arrival.shape[0]
     if T == 0:
         raise ValueError("chunk_trace needs a non-empty trace")
-    if np.any(np.diff(arrival) < 0):
-        k = int(np.argmax(np.diff(arrival) < 0))
-        raise ValueError(
-            f"chunk_trace needs a time-sorted trace, but arrival[{k + 1}]="
-            f"{arrival[k + 1]} < arrival[{k}]={arrival[k]}; sort the tasks "
-            f"by arrival first (np.argsort) — streaming windows rely on "
-            f"the next window's first arrival bounding every later one")
     import jax.numpy as jnp
 
     gid = (np.asarray(trace.gid, np.int32) if trace.gid is not None
            else np.arange(T, dtype=np.int32))
+    cores = np.asarray(trace.cores, np.float32)
+    work = np.asarray(trace.work, np.float32)
+    if np.any(np.diff(arrival) < 0):
+        order = np.argsort(arrival, kind="stable")
+        arrival, cores, work, gid = (arrival[order], cores[order],
+                                     work[order], gid[order])
     n_windows = -(-T // W)
     pad = n_windows * W - T
 
@@ -188,8 +190,8 @@ def chunk_trace(trace: Trace, window: int) -> WindowedTrace:
 
     return WindowedTrace(
         arrival=chunk(arrival, np.inf, np.float32),
-        cores=chunk(trace.cores, 0.0, np.float32),
-        work=chunk(trace.work, 0.0, np.float32),
+        cores=chunk(cores, 0.0, np.float32),
+        work=chunk(work, 0.0, np.float32),
         gid=chunk(gid, -1, np.int32),
     )
 

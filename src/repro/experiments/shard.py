@@ -109,10 +109,13 @@ def _sharded_runner(spec, devs, treedef, flags):
 
     def run(trace_params, t_stop):
         trace, params = trace_params
-        return engine.simulate_batch(spec, trace, params, t_stop)
+        # the checked (results, compact_ok) variant: the host wrapper below
+        # inspects the concrete per-lane flags and replays densely on a
+        # compaction-bucket overflow (DESIGN.md §7)
+        return engine._simulate_batch_jit(spec, trace, params, t_stop)
 
     fn = shard_map(run, mesh=mesh, in_specs=(in_specs, P()),
-                   out_specs=P("batch"), check_rep=False)
+                   out_specs=(P("batch"), P("batch")), check_rep=False)
     return jax.jit(fn)
 
 
@@ -144,7 +147,12 @@ def simulate_batch_sharded(
         trace, params = _pad_batch((trace, params), flags, pad)
     treedef = jax.tree.structure((trace, params))
     runner = _sharded_runner(spec, devs[:d], treedef, flags)
-    res = runner((trace, params), jnp.asarray(t_stop, jnp.float32))
+    res, ok = runner((trace, params), jnp.asarray(t_stop, jnp.float32))
+    if engine._needs_dense_rerun(spec, ok[:n]):
+        engine._warn_dense_rerun(spec)
+        runner = _sharded_runner(engine.dense_spec(spec), devs[:d],
+                                 treedef, flags)
+        res, _ = runner((trace, params), jnp.asarray(t_stop, jnp.float32))
     if pad:
         res = jax.tree.map(lambda l: l[:n], res)
     return res
@@ -204,6 +212,7 @@ def simulate_stream_batch(
         raise ValueError(
             f"inconsistent batch-axis lengths across leaves: {sorted(sizes)}")
     n = sizes.pop()
+    params0 = params               # pre-pad view, for the dense replay
     devs = tuple(jax.devices() if devices is None else devices)
     d = shard_count(n, len(devs))
     pad = pad_rows(n, d) if d > 1 else 0
@@ -235,6 +244,20 @@ def simulate_stream_batch(
         carry, ys = runner(carry, cur, params, t_prev_next, t_next, t_stop)
         outs.append(ys)
         t_prev_next, cur = t_next, nxt
+
+    if engine._needs_dense_rerun(spec, carry.compact_ok[:n]):
+        # same policy as simulate_stream: replayable window sources restart
+        # the whole sweep densely; consumed generators fail loudly
+        if hasattr(windows, "n_windows") and hasattr(windows, "window"):
+            engine._warn_dense_rerun(spec)
+            return simulate_stream_batch(
+                engine.dense_spec(spec), windows, params0,
+                n_slots=Q, t_stop=t_stop, devices=devices)
+        raise RuntimeError(
+            "active-set compaction bucket overflowed mid-stream and the "
+            "window source is a consumed generator that cannot be "
+            "replayed; rerun with spec.compact=0 (dense) or pass a "
+            "replayable WindowedTrace")
 
     gids = jnp.concatenate([o["gid"] for o in outs], axis=-1)
     t_done = jnp.concatenate([o["t_done"] for o in outs], axis=-1)

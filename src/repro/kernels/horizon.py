@@ -41,6 +41,16 @@ def _kernel(cand_ref, mask_ref, out_ref, acc_ref, *, n_b: int):
         out_ref[0, 0] = jnp.min(acc_ref[...])
 
 
+def _kernel_small(cand_ref, mask_ref, out_ref):
+    """Single-block (bucket-sized) variant: the whole candidate vector fits
+    one VMEM tile, so the reduction is one fused where+min — no grid, no
+    carried scratch, no ``pl.when`` plumbing.  This is the shape the
+    active-set-compacted horizon produces (DESIGN.md §7): ~2*FB flow lanes
+    + P PM lanes + a handful of scalar tails."""
+    x = jnp.where(mask_ref[...] > 0, cand_ref[...], _BIG)
+    out_ref[0, 0] = jnp.min(x)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def masked_min(cand: jax.Array, mask: jax.Array, *,
                interpret: bool = False) -> jax.Array:
@@ -53,6 +63,16 @@ def masked_min(cand: jax.Array, mask: jax.Array, *,
     mask2 = jnp.pad(mask.astype(jnp.float32), (0, N_pad - N),
                     constant_values=0.0).reshape(-1, LANES)
     n_b = N_pad // NB
+    if n_b == 1:
+        # bucket-sized input (e.g. the compacted horizon): one block, one
+        # fused reduction — skip the grid sweep and the VMEM scratch
+        out = pl.pallas_call(
+            _kernel_small,
+            out_specs=pl.BlockSpec(memory_space=pltpu.SMEM),
+            out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            interpret=interpret,
+        )(cand2, mask2)
+        return out[0, 0]
     blk = pl.BlockSpec((ROWS, LANES), lambda b: (b, 0))
     out = pl.pallas_call(
         functools.partial(_kernel, n_b=n_b),

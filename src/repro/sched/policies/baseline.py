@@ -97,6 +97,38 @@ def ondemand(spec, params, ctx, st: CloudState) -> CloudState:
     return wake_sleep_pass(spec, params, ctx.trace, st)
 
 
+# --- event-gate triggers (registry ``trigger=``, DESIGN.md §7): each is a
+# *necessary* condition for its policy to change state, letting the loop
+# stage skip the policy body when nothing it reacts to happened.
+
+
+def _queued_any(spec, params, ctx, st):
+    """A request is queued — the only thing the queue-serving VM policies
+    react to.  With no queued task, one serve_queue round selects the old
+    value everywhere (every write is ``where(False, ...)`` or an exact
+    ``+0.0`` add) and exits: bitwise identity."""
+    return ((st.task_state == TASK_PENDING)
+            & (ctx.trace.arrival <= st.t)).any()
+
+
+def _never(spec, params, ctx, st):
+    return jnp.bool_(False)
+
+
+def _wake_sleep_trigger(spec, params, ctx, st):
+    """On-demand acts only by waking (needs a queued-core deficit, hence a
+    queued task) or sleeping a loadless RUNNING host — both conditions
+    checked here verbatim; with neither, every write in
+    :func:`wake_sleep_pass` selects the old value (``wake``/``idle`` all
+    False), so skipping is bitwise identity."""
+    queued = (st.task_state == TASK_PENDING) & (ctx.trace.arrival <= st.t)
+    hosted = jax.ops.segment_sum(
+        (st.vstage != mc.VM_FREE).astype(jnp.int32), st.vm_host,
+        num_segments=spec.n_pm)
+    loadless = (st.pstate == PM_RUNNING) & (hosted == 0)
+    return queued.any() | loadless.any()
+
+
 # flow-slot fields rewritten by dispatch, migration, and (under the
 # complex power model) the hidden transition consumers
 FLOW_FIELDS = ("f_pr", "f_total", "f_pl", "f_prov", "f_cons", "f_active",
@@ -105,9 +137,11 @@ WAKE_SLEEP_DELTA = ("pstate", "pstate_end") + FLOW_FIELDS
 
 registry.register(
     "pm", "alwayson", alwayson, code=0, starts_running=True,
+    trigger=_never,
     doc="identity: the whole fleet stays powered on")
 registry.register(
     "pm", "ondemand", ondemand, code=1, requires=WAKE_SLEEP_DELTA,
+    trigger=_wake_sleep_trigger,
     doc="wake machines against the queued core deficit, sleep loadless ones")
 
 # --------------------------------------------------------------- VM layer
@@ -131,10 +165,13 @@ DISPATCH_DELTA = ("task_state", "task_vm", "vstage", "vm_task", "vm_host",
 
 registry.register(
     "vm", "firstfit", firstfit, code=0, requires=DISPATCH_DELTA,
+    trigger=_queued_any,
     doc="arrival-ordered queue, first running host with the cores free")
 registry.register(
     "vm", "nonqueuing", nonqueuing, code=1, requires=DISPATCH_DELTA,
+    trigger=_queued_any,
     doc="first-fit, but a request that cannot start now is rejected")
 registry.register(
     "vm", "smallestfirst", smallestfirst, code=2, requires=DISPATCH_DELTA,
+    trigger=_queued_any,
     doc="serve the smallest queued task first (backfilling flavour)")

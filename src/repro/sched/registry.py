@@ -58,6 +58,15 @@ class Policy:
     #                                  fields it may write
     starts_running: bool = False     # PM layer: the fleet boots powered on
     doc: str = ""
+    trigger: Callable | None = None  # event-gate: (spec, params, ctx, state)
+    #   -> bool scalar.  The loop stage skips the policy body entirely
+    #   (lax.cond) whenever this returns False, so it MUST be a *necessary*
+    #   condition for the policy to change state — i.e. trigger False
+    #   implies the policy is bitwise identity on ``state``.  ``None``
+    #   (the default) means "may always act": the policy runs every
+    #   iteration, exactly as before triggers existed.  This mirrors the
+    #   paper's subscription model (§3.5: schedulers are notified on queue
+    #   / machine state changes, they do not poll every tick).
 
 
 _registry: dict[str, dict[int, Policy]] = {layer: {} for layer in LAYERS}
@@ -115,7 +124,7 @@ def _check_layer(layer: str) -> None:
 
 def register(layer: str, name: str, fn: Callable, *, code: int | None = None,
              requires: tuple[str, ...] = (), starts_running: bool = False,
-             doc: str = "") -> Policy:
+             doc: str = "", trigger: Callable | None = None) -> Policy:
     """Register ``fn`` as a scheduler policy; returns its :class:`Policy`.
 
     ``code`` defaults to the next free code of the layer; passing a code
@@ -126,6 +135,11 @@ def register(layer: str, name: str, fn: Callable, *, code: int | None = None,
     :class:`~repro.core.loop.state.CloudState` fields it may write.  Field
     *names* are validated against the state protocol (what the body
     actually writes is the author's contract to keep).
+
+    ``trigger`` optionally declares the policy's event gate (see
+    :class:`Policy`): a cheap necessary condition for the policy to act,
+    letting the loop stage skip the body when nothing it reacts to
+    happened.  Omit it unless the identity claim genuinely holds.
     """
     _check_layer(layer)
     _ensure_builtins()
@@ -152,9 +166,11 @@ def register(layer: str, name: str, fn: Callable, *, code: int | None = None,
         raise ValueError(
             f"policy {name!r} requires unknown CloudState field(s) "
             f"{sorted(unknown)}; known: {CloudState._fields}")
+    if trigger is not None and not callable(trigger):
+        raise TypeError(f"policy trigger must be callable, got {trigger!r}")
     policy = Policy(code=code, name=name, layer=layer, fn=fn,
                     requires=tuple(requires), starts_running=starts_running,
-                    doc=doc)
+                    doc=doc, trigger=trigger)
     table[code] = policy
     _invalidate_compiled_engines()
     return policy
@@ -246,6 +262,21 @@ def stage_branches(layer: str, ctx) -> tuple[Callable, ...]:
         return lambda st: fn(ctx.spec, ctx.params, ctx, st)
 
     return tuple(bind(p.fn) for p in policies(layer))
+
+
+def trigger_branches(layer: str, ctx) -> tuple[Callable, ...]:
+    """The event-gate branch list matching :func:`stage_branches`: one
+    ``(st) -> bool`` callable per code.  A policy without a declared
+    trigger gets a constant-True gate — it runs every iteration."""
+    import jax.numpy as jnp
+
+    def bind(p):
+        if p.trigger is None:
+            return lambda st: jnp.bool_(True)
+        return lambda st: jnp.asarray(
+            p.trigger(ctx.spec, ctx.params, ctx, st), bool)
+
+    return tuple(bind(p) for p in policies(layer))
 
 
 def start_running_codes() -> tuple[int, ...]:

@@ -1,0 +1,177 @@
+"""Active-set compaction + coalesced stepping (DESIGN.md §7): the dense
+pipeline is the oracle — compaction, bucket overflow replay, K-step
+coalescing and the event-gated management stages must all reproduce its
+results *bit for bit*."""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core.engine import CloudParams, CloudSpec, Trace
+from repro.core.loop import compact as cpk
+from repro.core.trace import chunk_trace
+from repro.sched import registry
+
+
+def _bits(x) -> np.ndarray:
+    x = np.asarray(x)
+    if np.issubdtype(x.dtype, np.floating):
+        return x.view({2: np.uint16, 4: np.uint32, 8: np.uint64}[x.itemsize])
+    return x
+
+
+def _assert_tree_bitwise(a, b, msg=""):
+    la, ta = jax.tree.flatten(a)
+    lb, tb = jax.tree.flatten(b)
+    assert ta == tb
+    for i, (x, y) in enumerate(zip(la, lb)):
+        np.testing.assert_array_equal(
+            _bits(x), _bits(y), err_msg=f"{msg}: leaf {i} diverges")
+
+
+def _scenario(n_pm=3, n_vm=24, T=32, spread=400.0, seed=1):
+    rng = np.random.default_rng(seed)
+    spec = CloudSpec(n_pm=n_pm, n_vm=n_vm, compact=0)
+    arr = np.sort(rng.uniform(0, spread, T)).astype(np.float32)
+    trace = Trace(
+        arrival=jnp.asarray(arr),
+        cores=jnp.asarray(rng.integers(1, 3, T).astype(np.float32)),
+        work=jnp.asarray(rng.uniform(5, 20, T).astype(np.float32)))
+    return spec, trace
+
+
+# ---------------------------------------------------------------------------
+# watermark rule
+# ---------------------------------------------------------------------------
+
+def test_watermark_rule():
+    # auto: next_pow2(4P + 32), enabled only when <= half the flow count
+    assert cpk.compact_bucket(CloudSpec(n_pm=20, n_vm=256)) == 128
+    assert cpk.compact_bucket(CloudSpec(n_pm=20, n_vm=1024)) == 128
+    assert cpk.compact_bucket(CloudSpec(n_pm=3, n_vm=12)) == 0    # too small
+    assert cpk.compact_bucket(CloudSpec(n_pm=6, n_vm=120)) == 0
+    # explicit: rounded up to a power of two, only when < dense F
+    assert cpk.compact_bucket(CloudSpec(n_pm=3, n_vm=24, compact=8)) == 8
+    assert cpk.compact_bucket(CloudSpec(n_pm=3, n_vm=24, compact=12)) == 16
+    assert cpk.compact_bucket(CloudSpec(n_pm=3, n_vm=24, compact=64)) == 0
+    assert cpk.compact_bucket(CloudSpec(n_pm=3, n_vm=24, compact=0)) == 0
+
+
+def test_build_compact_ascending_and_ok():
+    # ascending fidx (the bit-identity invariant for segment sums) and an
+    # honest ok verdict
+    spec = CloudSpec(n_pm=3, n_vm=13, compact=8)
+    st = engine.init_state(spec, _scenario()[1])
+    f_active = jnp.zeros((16,), bool).at[jnp.asarray([9, 2, 11, 5])].set(True)
+    st = st._replace(f_active=f_active)
+    cp = cpk.build_compact(spec, st)
+    got = np.asarray(cp.fidx)[np.asarray(cp.fvalid)]
+    np.testing.assert_array_equal(got, [2, 5, 9, 11])
+    assert bool(cp.ok)
+
+
+# ---------------------------------------------------------------------------
+# bitwise equality: compacted vs dense
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bucket", [8, 16])
+def test_compact_matches_dense_bitwise(bucket):
+    spec, trace = _scenario()
+    spec_c = dataclasses.replace(spec, compact=bucket)
+    assert cpk.compact_bucket(spec_c) == bucket  # compaction really on
+    res_d = jax.block_until_ready(engine.simulate(spec, trace))
+    res_c = jax.block_until_ready(engine.simulate(spec_c, trace))
+    _assert_tree_bitwise(res_d, res_c, f"bucket={bucket}")
+
+
+def test_compact_overflow_warns_and_replays_dense():
+    # a 2-lane bucket cannot hold the active set: the checked compaction
+    # must warn and replay densely — same bits, never a wrong answer
+    spec, trace = _scenario()
+    res_d = jax.block_until_ready(engine.simulate(spec, trace))
+    spec_tiny = dataclasses.replace(spec, compact=2)
+    assert cpk.compact_bucket(spec_tiny) == 2
+    with pytest.warns(RuntimeWarning, match="overflowed"):
+        res_t = jax.block_until_ready(engine.simulate(spec_tiny, trace))
+    _assert_tree_bitwise(res_d, res_t, "overflow replay")
+
+
+@pytest.mark.parametrize("k", [2, 4])
+def test_coalesced_steps_match_k1(k):
+    # K micro-steps per while_loop body: the cond-guarded extra passes are
+    # exact skips once settled, so any K gives the K=1 bits
+    spec, trace = _scenario()
+    spec_c = dataclasses.replace(spec, compact=8)
+    res_1 = jax.block_until_ready(
+        engine.simulate(dataclasses.replace(spec_c, steps_per_iter=1), trace))
+    res_k = jax.block_until_ready(
+        engine.simulate(dataclasses.replace(spec_c, steps_per_iter=k), trace))
+    _assert_tree_bitwise(res_1, res_k, f"K={k}")
+
+
+def test_stream_compact_matches_dense_bitwise():
+    spec, trace = _scenario()
+    spec_c = dataclasses.replace(spec, compact=8)
+    wt = chunk_trace(trace, 8)
+    res_d = jax.block_until_ready(engine.simulate_stream(spec, wt))
+    res_c = jax.block_until_ready(engine.simulate_stream(spec_c, wt))
+    _assert_tree_bitwise(res_d, res_c, "stream compact")
+
+
+def test_batch_compact_matches_dense_bitwise():
+    spec, trace = _scenario()
+    spec_c = dataclasses.replace(spec, compact=8)
+    params = CloudParams.for_spec(spec)
+    batched = jax.tree.map(
+        lambda x: jnp.stack([x, x * np.float32(1.25)]),
+        params.perf_core)
+    params_b = dataclasses.replace(params, perf_core=batched)
+    res_d = jax.block_until_ready(
+        engine.simulate_batch(spec, trace, params_b))
+    res_c = jax.block_until_ready(
+        engine.simulate_batch(spec_c, trace, params_b))
+    _assert_tree_bitwise(res_d, res_c, "batch compact")
+
+
+# ---------------------------------------------------------------------------
+# event-gated management (registry triggers, DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+def test_trigger_gates_are_identity():
+    """A policy ``trigger`` is a *necessary* condition: forcing every gate
+    open (always running the stage bodies) must not change a single bit —
+    the gates only skip iterations whose body would have been a no-op."""
+    spec, trace = _scenario(seed=5)
+    params = CloudParams.for_spec(spec, vm_sched="firstfit",
+                                  pm_sched="ondemand")
+    real_branches = registry.trigger_branches
+    try:
+        res_gated = jax.block_until_ready(
+            engine.simulate(spec, trace, params))
+
+        def all_open(layer, ctx):
+            return tuple(lambda st: jnp.bool_(True)
+                         for _ in registry.policies(layer))
+
+        registry.trigger_branches = all_open
+        engine.simulate.clear_cache()
+        res_open = jax.block_until_ready(
+            engine.simulate(spec, trace, params))
+    finally:
+        registry.trigger_branches = real_branches
+        engine.simulate.clear_cache()
+    _assert_tree_bitwise(res_gated, res_open, "trigger gate")
+
+
+def test_trigger_registration_contract():
+    # every registered trigger is callable; trigger_branches gives the
+    # constant-True branch to trigger-less policies
+    for layer in ("vm", "pm"):
+        for p in registry.policies(layer):
+            assert p.trigger is None or callable(p.trigger)

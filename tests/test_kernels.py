@@ -9,7 +9,7 @@ import pytest
 
 from repro.kernels import ref
 from repro.kernels.attention import flash_attention
-from repro.kernels.horizon import masked_min
+from repro.kernels.horizon import NB, masked_min
 from repro.kernels.maxmin import fill_stats, maxmin_solve
 from repro.kernels.ssm import linear_scan
 from repro.models.attention import chunked_attention, naive_attention
@@ -55,7 +55,10 @@ def test_fill_stats_degenerate_empty():
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("C,S,seed", [(8, 4, 0), (64, 16, 1), (300, 40, 2),
-                                      (1024, 130, 3)])
+                                      (1024, 130, 3),
+                                      # exact compaction-bucket shapes
+                                      # (DESIGN.md §7): C = FB, S = 2*SB+2
+                                      (128, 258, 5), (129, 258, 6)])
 def test_maxmin_solve_matches_ref(C, S, seed):
     rng = np.random.RandomState(seed)
     provider = jnp.asarray(rng.randint(0, S, C), jnp.int32)
@@ -124,6 +127,45 @@ def test_masked_min_infinite_unmasked_lanes():
     mask = jnp.asarray([False, True, False, True])
     got = masked_min(cand, mask, interpret=True)
     assert float(got) == 2.0
+
+
+@pytest.mark.parametrize("N", [3, 277, NB - 1, NB, NB + 1,
+                               2 * NB - 1, 2 * NB, 2 * NB + 1])
+def test_masked_min_block_boundaries(N):
+    """Sizes straddling the block boundary route through both kernel
+    variants: ``N <= NB`` hits the single-block bucket kernel (the shape
+    the active-set-compacted horizon produces, DESIGN.md §7), ``N > NB``
+    the grid sweep with the carried VMEM scratch — one extra element must
+    never change the reduction."""
+    rng = np.random.RandomState(N)
+    cand = jnp.asarray((rng.randn(N) * 50).astype(np.float32))
+    mask = jnp.asarray(rng.rand(N) < 0.5)
+    want = ref.masked_min_ref(cand, mask)
+    got = masked_min(cand, mask, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("N", [5, NB, NB + 1, 2 * NB])
+def test_masked_min_all_masked_is_big(N):
+    """An all-masked candidate vector yields the _BIG sentinel through
+    both the single-block and the grid variant (the empty-horizon case the
+    engine maps to 'no event')."""
+    cand = jnp.asarray(np.linspace(-1e6, 1e6, N).astype(np.float32))
+    mask = jnp.zeros((N,), bool)
+    got = masked_min(cand, mask, interpret=True)
+    assert float(got) == float(np.float32(3.0e38))
+
+
+def test_masked_min_single_lane_survivor_at_block_edge():
+    """Exactly one unmasked lane, sitting on the last lane of a block."""
+    for N in (NB, NB + 1, 2 * NB):
+        cand = np.full((N,), 7.5, np.float32)
+        cand[NB - 1] = -3.25
+        mask = np.zeros((N,), bool)
+        mask[NB - 1] = True
+        got = masked_min(jnp.asarray(cand), jnp.asarray(mask),
+                         interpret=True)
+        assert float(got) == -3.25, N
 
 
 # ---------------------------------------------------------------------------

@@ -111,12 +111,44 @@ def test_chunk_trace_pads_and_masks_last_window():
         np.asarray(wt.gid).ravel()[valid], np.arange(10))
 
 
-def test_chunk_trace_rejects_unsorted():
-    tr = engine.Trace(arrival=jnp.asarray([0.0, 2.0, 1.0], jnp.float32),
-                      cores=jnp.ones((3,), jnp.float32),
-                      work=jnp.ones((3,), jnp.float32))
-    with pytest.raises(ValueError, match="time-sorted"):
-        chunk_trace(tr, 2)
+def test_chunk_trace_sorts_unsorted_stably():
+    # Unsorted input is stably argsorted by arrival: ties keep their
+    # original relative order, cores/work travel with their task, and gid
+    # carries the *original* index so per-task outputs still align with
+    # the caller's trace axis.
+    tr = engine.Trace(
+        arrival=jnp.asarray([2.0, 0.0, 1.0, 1.0], jnp.float32),
+        cores=jnp.asarray([1.0, 2.0, 4.0, 8.0], jnp.float32),
+        work=jnp.asarray([10.0, 20.0, 40.0, 80.0], jnp.float32))
+    wt = chunk_trace(tr, 2)
+    np.testing.assert_array_equal(
+        np.asarray(wt.arrival).ravel(), [0.0, 1.0, 1.0, 2.0])
+    np.testing.assert_array_equal(np.asarray(wt.gid).ravel(), [1, 2, 3, 0])
+    np.testing.assert_array_equal(
+        np.asarray(wt.cores).ravel(), [2.0, 4.0, 8.0, 1.0])
+    np.testing.assert_array_equal(
+        np.asarray(wt.work).ravel(), [20.0, 40.0, 80.0, 10.0])
+
+
+def test_chunk_trace_unsorted_stream_matches_sorted():
+    # Shuffling the task axis must not change the streamed simulation: the
+    # stable sort reconstructs the time order and gid maps results back.
+    spec, _ = engine.make_cloud(n_pm=2, n_vm=8, pm_cores=8.0)
+    trace = filter_fitting(gwa_like_trace("das2", 24, seed=11), 8.0)
+    perm = np.random.RandomState(0).permutation(trace.n)
+    shuffled = engine.Trace(arrival=trace.arrival[perm],
+                            cores=trace.cores[perm],
+                            work=trace.work[perm],
+                            gid=jnp.asarray(perm, jnp.int32))
+    ref = jax.block_until_ready(
+        engine.simulate_stream(spec, chunk_trace(trace, 8)))
+    got = jax.block_until_ready(
+        engine.simulate_stream(spec, chunk_trace(shuffled, 8)))
+    np.testing.assert_array_equal(_bits(ref.completion),
+                                  _bits(got.completion))
+    np.testing.assert_array_equal(np.asarray(ref.rejected),
+                                  np.asarray(got.rejected))
+    assert _bits(ref.t_end) == _bits(got.t_end)
 
 
 def test_chunk_trace_rejects_bad_window():

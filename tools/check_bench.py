@@ -1,0 +1,124 @@
+"""CI throughput-regression guard over the BENCH_* trajectory artifacts.
+
+Compares the freshly-written ``experiments/bench/BENCH_<module>.json``
+files against the committed baselines (``git show HEAD:<path>`` — in CI
+the benchmark step has already overwritten the working tree) and fails
+when any shared row's ``events_per_s`` drops by more than
+``--threshold`` (default 25%).
+
+Cold-cache demotion: when the fresh run visibly paid the engine's
+compile wall (any row's ``compile_wall_s`` at or above
+``--cold-compile-s``), its wall-clocks were taken on a machine that was
+also compiling — regressions in that module are reported as *warnings*
+instead of failures, so a cache-miss CI run never hard-fails on timing
+noise.  Genuine regressions still surface on the next warm run.
+
+Usage (CI runs this right after ``benchmarks.run --only
+sweep,scaling,streaming``):
+
+    PYTHONPATH=src python tools/check_bench.py --modules sweep,scaling,streaming
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# identity fields: rows are matched across runs by (every one present)
+KEY_FIELDS = ("name", "n_pm", "n_vm", "tasks", "points", "window",
+              "windows", "parallel", "machines", "family",
+              "steps_per_iter", "trace_lengths")
+
+
+def row_key(row: dict):
+    return tuple((f, json.dumps(row[f])) for f in KEY_FIELDS if f in row)
+
+
+def load_baseline(relpath: str) -> list | None:
+    """The committed version of ``relpath`` (HEAD), or None if it never
+    existed — the guard passes trivially on a module's first landing."""
+    try:
+        out = subprocess.run(
+            ["git", "show", f"HEAD:{relpath}"], cwd=ROOT,
+            capture_output=True, check=True)
+    except (subprocess.CalledProcessError, FileNotFoundError):
+        return None
+    return json.loads(out.stdout)
+
+
+def check_module(module: str, threshold: float,
+                 cold_compile_s: float) -> tuple[list[str], list[str]]:
+    """-> (hard regressions, warnings) for one BENCH module."""
+    relpath = f"experiments/bench/BENCH_{module}.json"
+    fresh_path = ROOT / relpath
+    if not fresh_path.exists():
+        return [], [f"{module}: {relpath} not found — benchmark not run"]
+    fresh = json.loads(fresh_path.read_text())
+    base = load_baseline(relpath)
+    if base is None:
+        return [], [f"{module}: no committed baseline — skipping"]
+
+    cold = any(float(r.get("compile_wall_s", 0.0)) >= cold_compile_s
+               for r in fresh if isinstance(r, dict))
+    base_by_key = {row_key(r): r for r in base
+                   if isinstance(r, dict) and "events_per_s" in r}
+    regressions, warnings, compared = [], [], 0
+    for row in fresh:
+        if not isinstance(row, dict) or "events_per_s" not in row:
+            continue
+        ref = base_by_key.get(row_key(row))
+        if ref is None:
+            continue
+        compared += 1
+        got, want = float(row["events_per_s"]), float(ref["events_per_s"])
+        if want <= 0:
+            continue
+        drop = 1.0 - got / want
+        if drop > threshold:
+            msg = (f"{module}: {dict(row_key(row))} events_per_s "
+                   f"{want:.1f} -> {got:.1f} ({drop:+.0%} drop)")
+            if cold:
+                warnings.append(msg + " [cold cache: warning only]")
+            else:
+                regressions.append(msg)
+    if compared == 0:
+        warnings.append(f"{module}: no comparable rows between baseline "
+                        f"and fresh run (row keys changed?)")
+    return regressions, warnings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--modules", default="sweep,scaling,streaming",
+                    help="comma list of BENCH modules to guard")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="fractional events/s drop that fails (default .25)")
+    ap.add_argument("--cold-compile-s", type=float, default=30.0,
+                    help="compile_wall_s at/above this marks the run "
+                         "cold-cache; its regressions only warn")
+    args = ap.parse_args(argv)
+
+    all_reg, all_warn = [], []
+    for module in args.modules.split(","):
+        reg, warn = check_module(module.strip(), args.threshold,
+                                 args.cold_compile_s)
+        all_reg += reg
+        all_warn += warn
+    for msg in all_warn:
+        print(f"WARN  {msg}")
+    for msg in all_reg:
+        print(f"FAIL  {msg}")
+    if all_reg:
+        print(f"\n{len(all_reg)} throughput regression(s) beyond "
+              f"{args.threshold:.0%} — see above")
+        return 1
+    print(f"\nthroughput trajectory ok ({len(all_warn)} warning(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -97,12 +97,44 @@ def scenarios():
         wt = chunk_trace(tr_sorted, -(-tr_sorted.n // 4))
         return spec, engine.simulate_stream(spec, wt, params=params)
 
+    # Active-set compaction scenarios (DESIGN.md §7): explicit buckets at
+    # two distinct sizes plus a compacted streaming replay.  The spread-out
+    # trace keeps the live set inside the bucket, so these goldens pin the
+    # *compacted* code path (gather, bucketed solve, scatter-back), not the
+    # overflow replay.  Their bits must equal the dense engine's by
+    # construction — the point of pinning them is catching a compacted
+    # kernel regressing on its own.
+    tr_sparse = synthetic_trace(20, 4, spread_s=250.0,
+                                length_range=(5.0, 40.0), seed=23)
+
+    def compact8():
+        spec, params = engine.make_cloud(
+            n_pm=3, n_vm=12, pm_cores=4.0, vm_sched="firstfit",
+            pm_sched="ondemand", compact=8)
+        return spec, engine.simulate(spec, tr_sparse, params=params)
+
+    def compact16():
+        spec, params = engine.make_cloud(
+            n_pm=3, n_vm=24, pm_cores=4.0, vm_sched="smallestfirst",
+            pm_sched="ondemand", compact=16)
+        return spec, engine.simulate(spec, tr_sparse, params=params)
+
+    def streaming_compact():
+        from repro.core.trace import chunk_trace
+        spec, params = engine.make_cloud(
+            n_pm=3, n_vm=12, pm_cores=4.0, vm_sched="firstfit",
+            pm_sched="ondemand", metering_period=0.25, compact=8)
+        wt = chunk_trace(tr_sparse, -(-tr_sparse.n // 4))
+        return spec, engine.simulate_stream(spec, wt, params=params)
+
     return [("seq", seq), ("batched", batched),
             ("complex_power", complex_power), ("sampled", sampled),
             ("migration_policy", migration_policy),
             ("equal_share", equal_share),
             ("t_stop_partial", t_stop_partial),
-            ("streaming_windows", streaming_windows)]
+            ("streaming_windows", streaming_windows),
+            ("compact8", compact8), ("compact16", compact16),
+            ("streaming_compact", streaming_compact)]
 
 
 def flatten_result(name: str, res) -> dict[str, np.ndarray]:
